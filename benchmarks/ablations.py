@@ -1,0 +1,110 @@
+"""Beyond-paper ablations of the proposed technique's design choices.
+
+1. Reaction-function gains: the paper fixes tan(0.785·e)/arctan(1.55·e).
+   We sweep the asymmetry to show why slow-idle/fast-wake is the right
+   shape (symmetric or inverted gains either oversubscribe or leave
+   age-halting opportunity unused).
+2. Idling period: Algorithm 2's control interval trades oversubscription
+   risk against actuation overhead.
+3. Idle-history window: Algorithm 1's age-estimation window (8 in the
+   paper, after the Linux cpuidle governor).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import CoreManager, Policy
+from repro.core import idling, mapping
+from repro.sim import run_experiment
+
+from benchmarks.common import emit
+
+
+def _bursty_load(mgr: CoreManager, hours: float = 1.0, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    task_id, t = 0, 0.0
+    while t < hours * 3600:
+        for _ in range(rng.poisson(3)):
+            mgr.assign(task_id, t)
+            mgr.release(task_id, t + rng.uniform(0.005, 0.03))
+            task_id += 1
+        t += 1.0
+        mgr.periodic(t)
+    mgr.settle_all(hours * 3600)
+    return mgr
+
+
+def sweep_reaction_gains() -> list[dict]:
+    rows = []
+    base = (idling.UNDERUTIL_GAIN, idling.OVERSUB_GAIN)
+    try:
+        for under, over in [(0.785, 1.55),   # paper
+                            (1.55, 1.55),    # symmetric fast
+                            (0.785, 0.785),  # symmetric slow
+                            (1.55, 0.785),   # inverted (fast idle/slow wake)
+                            (0.4, 2.5)]:     # extreme asymmetry
+            idling.UNDERUTIL_GAIN, idling.OVERSUB_GAIN = under, over
+            mgr = _bursty_load(CoreManager(
+                40, policy=Policy.PROPOSED, rng=np.random.default_rng(0)))
+            samples = np.asarray(mgr.metrics.idle_norm_samples)
+            rows.append({
+                "ablation": "reaction_gains",
+                "underutil_gain": under,
+                "oversub_gain": over,
+                "is_paper": (under, over) == (0.785, 1.55),
+                "mean_degradation": round(
+                    mgr.mean_frequency_degradation(), 6),
+                "idle_p90": round(float(np.percentile(samples, 90)), 4),
+                "oversub_frac": round(float((samples < -0.1).mean()), 4),
+            })
+    finally:
+        idling.UNDERUTIL_GAIN, idling.OVERSUB_GAIN = base
+    return rows
+
+
+def sweep_idling_period() -> list[dict]:
+    rows = []
+    for period in (0.25, 1.0, 5.0, 30.0):
+        m = run_experiment(Policy.PROPOSED, num_cores=40, rate_rps=60,
+                           duration_s=60, seed=0, idling_period_s=period)
+        rows.append({
+            "ablation": "idling_period",
+            "period_s": period,
+            "deg_p50": round(m.mean_degradation_percentiles[50], 6),
+            "idle_p90": round(m.idle_norm_percentiles[90], 4),
+            "idle_p1": round(m.idle_norm_percentiles[1], 4),
+            "p99_latency_s": round(m.p99_latency_s, 2),
+        })
+    return rows
+
+
+def sweep_history_window() -> list[dict]:
+    rows = []
+    base = mapping.IDLE_HISTORY_LEN
+    try:
+        for win in (2, 8, 32):
+            mapping.IDLE_HISTORY_LEN = win
+            mgr = _bursty_load(CoreManager(
+                40, policy=Policy.PROPOSED, rng=np.random.default_rng(0)))
+            rows.append({
+                "ablation": "idle_history_window",
+                "window": win,
+                "is_paper": win == 8,
+                "freq_cv": round(mgr.frequency_cv(), 6),
+                "mean_degradation": round(
+                    mgr.mean_frequency_degradation(), 6),
+            })
+    finally:
+        mapping.IDLE_HISTORY_LEN = base
+    return rows
+
+
+def run() -> list[dict]:
+    rows = sweep_reaction_gains() + sweep_idling_period() \
+        + sweep_history_window()
+    emit("ablations", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

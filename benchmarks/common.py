@@ -1,0 +1,27 @@
+"""Shared benchmark helpers: CSV emission + experiment cache."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+
+def emit(name: str, rows: list[dict]) -> None:
+    """Print `name,key=value,...` lines and persist JSON."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    for row in rows:
+        flat = ",".join(f"{k}={v}" for k, v in row.items())
+        print(f"{name},{flat}")
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+
+
+def timed(fn, *args, n: int = 3, **kw):
+    fn(*args, **kw)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / n
+    return out, dt

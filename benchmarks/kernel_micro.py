@@ -1,0 +1,84 @@
+"""Kernel microbenchmarks: wall-time of the pure-jnp reference formulation
+on CPU (the Pallas kernels themselves target TPU; interpret mode is a
+correctness harness, not a performance proxy) + analytic kernel roofline
+occupancy for the TPU target."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.aging_update import ops as aging_ops
+from repro.core.aging import DEFAULT_PARAMS
+from repro.launch.mesh import HBM_BW, PEAK_BF16_FLOPS
+from benchmarks.common import emit, timed
+
+
+def run() -> list[dict]:
+    rows = []
+    key = jax.random.key(0)
+
+    # flash-attention ref (per-device prefill tile): B=1 H=8 S=2048 D=128
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    b, h, s, d = 1, 8, 2048, 128
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, h, s, d), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (b, h, s, d), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (b, h, s, d), jnp.bfloat16)
+    fn = jax.jit(lambda q, k, v: flash_attention_ref(q, k, v))
+    _, dt = timed(lambda: jax.block_until_ready(fn(q, k, v)))
+    flops = 4 * b * h * s * s * d
+    rows.append({"kernel": "flash_attention_ref_cpu",
+                 "us_per_call": round(dt * 1e6, 1),
+                 "tpu_roofline_s": flops / PEAK_BF16_FLOPS})
+
+    # decode-attention ref: B=8 H=32 S=32768 D=128 (memory-bound)
+    from repro.kernels.decode_attention.ref import decode_attention_ref_explicit
+    b, h, hkv, s, d = 8, 32, 8, 8192, 128
+    q1 = jax.random.normal(ks[0], (b, h, d), jnp.bfloat16)
+    kc = jax.random.normal(ks[1], (b, s, hkv, d), jnp.bfloat16)
+    vc = jax.random.normal(ks[2], (b, s, hkv, d), jnp.bfloat16)
+    pos = jnp.full((b,), s, jnp.int32)
+    fn = jax.jit(lambda q, k, v, p: decode_attention_ref_explicit(q, k, v, p))
+    _, dt = timed(lambda: jax.block_until_ready(fn(q1, kc, vc, pos)))
+    cache_bytes = 2 * b * s * hkv * d * 2
+    rows.append({"kernel": "decode_attention_ref_cpu",
+                 "us_per_call": round(dt * 1e6, 1),
+                 "tpu_roofline_s": cache_bytes / HBM_BW})
+
+    # ssd ref vs chunked on CPU
+    from repro.models.mamba2 import ssd_chunked, ssd_reference
+    b, l, h, p, n = 2, 2048, 8, 64, 128
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, l, h, p), jnp.bfloat16)
+    dts = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+    a_log = jax.random.normal(ks[2], (h,)) * 0.5
+    bb = jax.random.normal(ks[3], (b, l, n), jnp.bfloat16)
+    cc = jax.random.normal(ks[4], (b, l, n), jnp.bfloat16)
+    fn_seq = jax.jit(lambda *a: ssd_reference(*a)[0])
+    fn_chk = jax.jit(lambda *a: ssd_chunked(*a, chunk=256)[0])
+    _, dt_seq = timed(lambda: jax.block_until_ready(fn_seq(x, dts, a_log, bb, cc)))
+    _, dt_chk = timed(lambda: jax.block_until_ready(fn_chk(x, dts, a_log, bb, cc)))
+    rows.append({"kernel": "ssd_sequential_cpu", "us_per_call": round(dt_seq * 1e6, 1)})
+    rows.append({"kernel": "ssd_chunked_cpu", "us_per_call": round(dt_chk * 1e6, 1),
+                 "speedup_vs_sequential": round(dt_seq / dt_chk, 2)})
+
+    # aging update: fleet of 22 machines x 80 cores
+    import numpy as np
+    ncores = 22 * 80
+    rng = np.random.default_rng(0)
+    dvth = jnp.asarray(rng.uniform(0, 0.05, ncores), jnp.float32)
+    temp = jnp.asarray(rng.choice([48.0, 51.08, 54.0], ncores), jnp.float32)
+    stress = jnp.asarray(rng.choice([0.0, 1.0], ncores), jnp.float32)
+    tau = jnp.asarray(rng.uniform(0, 1e5, ncores), jnp.float32)
+    fn = jax.jit(lambda *a: aging_ops.advance_fleet(*a, DEFAULT_PARAMS,
+                                                    use_kernel=False))
+    _, dt = timed(lambda: jax.block_until_ready(fn(dvth, temp, stress, tau)))
+    rows.append({"kernel": "aging_update_fleet_cpu",
+                 "us_per_call": round(dt * 1e6, 1), "cores": ncores})
+
+    emit("kernel_micro", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

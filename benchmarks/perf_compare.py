@@ -1,0 +1,57 @@
+"""§Perf: compare baseline vs optimized dry-run records side-by-side.
+
+  PYTHONPATH=src python -m benchmarks.perf_compare \
+      [--base experiments/dryrun] [--opt experiments/dryrun_opt]
+
+Emits a markdown table of the three roofline terms before/after and the
+delta on each pair's dominant term (the hillclimb verdict input).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load_dir(d: str) -> dict:
+    out = {}
+    for fn in glob.glob(os.path.join(d, "*.json")):
+        r = json.load(open(fn))
+        if r.get("mesh") != "16x16":
+            continue
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--base", default="experiments/dryrun")
+    ap.add_argument("--opt", default="experiments/dryrun_opt")
+    args = ap.parse_args()
+    base = load_dir(args.base)
+    opt = load_dir(args.opt)
+    keys = sorted(set(base) & set(opt))
+    if not keys:
+        print("no overlapping records")
+        return
+    print("| arch | shape | term | baseline s | optimized s | delta |")
+    print("|---|---|---|---|---|---|")
+    for k in keys:
+        b, o = base[k], opt[k]
+        dom = b["bottleneck"]
+        for term in ("compute", "memory", "collective"):
+            tb = b["roofline_s"][term]
+            to = o["roofline_s"][term]
+            mark = " **<-dom**" if term == dom else ""
+            delta = (1 - to / tb) * 100 if tb else 0.0
+            print(f"| {k[0]} | {k[1]} | {term}{mark} | {tb:.3e} | "
+                  f"{to:.3e} | {delta:+.1f}% |")
+        pb = b["per_device"]["peak_bytes"] / 1e9
+        po = o["per_device"]["peak_bytes"] / 1e9
+        print(f"| {k[0]} | {k[1]} | peak GB | {pb:.2f} | {po:.2f} | "
+              f"{(1 - po / pb) * 100:+.1f}% |")
+
+
+if __name__ == "__main__":
+    main()

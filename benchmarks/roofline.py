@@ -1,0 +1,93 @@
+"""Aggregate dry-run JSON records into the §Roofline table.
+
+Reads experiments/dryrun/*.json (written by `repro.launch.dryrun --out`),
+computes the three roofline terms per (arch x shape) on the single-pod
+mesh, identifies the dominant bottleneck, and emits a markdown table +
+the hillclimb-candidate selection (worst roofline fraction, most
+collective-bound, most paper-representative).
+
+  PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dir_: str, mesh: str = "16x16") -> list[dict]:
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(fn) as f:
+            r = json.load(f)
+        if r.get("mesh") == mesh:
+            recs.append(r)
+    return recs
+
+
+def enrich(r: dict) -> dict:
+    t = r["roofline_s"]
+    dom = max(t, key=t.get)
+    total = max(t.values())
+    step_time = total  # bound = max of the three terms (no overlap model)
+    compute_frac = t["compute"] / max(step_time, 1e-30)
+    return {
+        **r,
+        "dominant": dom,
+        "bound_step_s": step_time,
+        "roofline_fraction": compute_frac,  # fraction of bound that is MXU
+    }
+
+
+def table(recs: list[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "bottleneck | peak GB/dev | useful FLOP ratio |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for r in recs:
+        t = r["roofline_s"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute']:.3e} | "
+            f"{t['memory']:.3e} | {t['collective']:.3e} | "
+            f"{r['dominant']} | "
+            f"{r['per_device']['peak_bytes']/1e9:.2f} | "
+            f"{r['useful_flops_ratio']:.3f} |")
+    return hdr + "\n".join(rows)
+
+
+def candidates(recs: list[dict]) -> dict:
+    """Select the three hillclimb pairs."""
+    def key(r):
+        return f"{r['arch']} x {r['shape']}"
+
+    worst_frac = min(recs, key=lambda r: r["roofline_fraction"])
+    coll = max(recs, key=lambda r: (r["roofline_s"]["collective"]
+                                    / max(r["bound_step_s"], 1e-30)))
+    # most representative of the paper: the serving decode path of the
+    # largest dense model (host-CPU tasks per decode step dominate the
+    # paper's workload -> decode_32k llama3-8b)
+    rep = next((r for r in recs if r["arch"] == "llama3-8b"
+                and r["shape"] == "decode_32k"), recs[0])
+    return {"worst_roofline_fraction": key(worst_frac),
+            "most_collective_bound": key(coll),
+            "paper_representative": key(rep)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    recs = [enrich(r) for r in load(args.dir)]
+    if not recs:
+        print("no dry-run records found; run repro.launch.dryrun --all "
+              "--out", args.dir)
+        return
+    print(table(recs))
+    print()
+    for k, v in candidates(recs).items():
+        print(f"{k}: {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+  fig2  — CPU task concurrency distributions (paper Fig. 2)
+  fig6  — aging-effect management vs baselines (paper Fig. 6)
+  fig7  — yearly embodied carbon reduction (paper Fig. 7)
+  fig8  — idle-core utilization / oversubscription (paper Fig. 8)
+  kern  — kernel microbenches + TPU roofline occupancy
+  (roofline terms per arch x shape come from the dry-run: see
+   `python -m repro.launch.dryrun --all --out experiments/dryrun` and
+   benchmarks/roofline.py which aggregates them into EXPERIMENTS.md.)
+
+Prints ``name,key=value,...`` CSV lines; JSON persisted to experiments/.
+Use --quick for CI-scale runs.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="short traces (CI); full runs match the paper")
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig1,fig2,fig6,fig7,fig8,kern,ablations")
+    args = ap.parse_args()
+    dur = 30.0 if args.quick else 120.0
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name: str) -> bool:
+        return only is None or name in only
+
+    from benchmarks import (ablations, fig1_motivation,
+                            fig2_task_distribution, fig6_aging_effects,
+                            fig7_carbon, fig8_idle_cores, kernel_micro)
+
+    if want("fig1"):
+        fig1_motivation.run()
+    if want("fig2"):
+        fig2_task_distribution.run(duration_s=dur)
+    if want("fig6"):
+        fig6_aging_effects.run(duration_s=dur)
+    if want("fig7"):
+        fig7_carbon.run(duration_s=dur)
+    if want("fig8"):
+        fig8_idle_cores.run(duration_s=dur)
+    if want("kern"):
+        kernel_micro.run()
+    if want("ablations") and not args.quick:
+        ablations.run()
+    print("benchmarks complete", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Reproduce the paper's headline numbers end-to-end and print a report:
+37.67% yearly embodied carbon reduction (p99), 77% less underutilization,
+<10% oversubscription.
+
+  PYTHONPATH=src python examples/carbon_report.py [--duration 300]
+"""
+import argparse
+
+from repro.sim import carbon_comparison, run_policy_sweep
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--duration", type=float, default=120.0)
+    ap.add_argument("--rate", type=float, default=70.0)
+    ap.add_argument("--cores", type=int, default=40)
+    args = ap.parse_args()
+
+    res = run_policy_sweep(num_cores=args.cores, rate_rps=args.rate,
+                           duration_s=args.duration, seed=1)
+    linux, proposed = res["linux"], res["proposed"]
+
+    print(f"cluster: 22 machines (5 prompt + 17 token), {args.cores}-core "
+          f"VMs, {args.rate} req/s, {args.duration:.0f}s Azure-like trace\n")
+    print(f"{'metric':44s} {'paper':>10s} {'ours':>10s}")
+    est99 = carbon_comparison(linux, proposed, 99)
+    est50 = carbon_comparison(linux, proposed, 50)
+    print(f"{'yearly embodied carbon reduction (p99)':44s} "
+          f"{'37.67%':>10s} {100*est99.reduction_frac:>9.2f}%")
+    print(f"{'yearly embodied carbon reduction (p50)':44s} "
+          f"{'49.01%':>10s} {100*est50.reduction_frac:>9.2f}%")
+    underutil = 100 * (1 - proposed.idle_norm_percentiles[90]
+                       / max(linux.idle_norm_percentiles[90], 1e-9))
+    print(f"{'CPU underutilization reduction (p90)':44s} "
+          f"{'>=77%':>10s} {underutil:>9.1f}%")
+    print(f"{'oversubscription bound (p1 idle norm)':44s} "
+          f"{'>-0.1':>10s} {proposed.idle_norm_percentiles[1]:>10.3f}")
+    lat = 100 * (proposed.p99_latency_s / linux.p99_latency_s - 1)
+    print(f"{'service quality impact (p99 latency)':44s} "
+          f"{'<10%':>10s} {lat:>+9.2f}%")
+
+
+if __name__ == "__main__":
+    main()

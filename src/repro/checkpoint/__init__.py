@@ -1,0 +1,1 @@
+"""npz checkpoint store."""

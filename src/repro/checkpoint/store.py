@@ -1,0 +1,97 @@
+"""Checkpointing: flat-key .npz store for params/opt-state + JSON metadata.
+
+No orbax offline; this implements atomic-rename checkpoints with step
+retention, which is what the training driver needs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+
+import jax
+import numpy as np
+
+_SEP = "::"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jax.numpy.bfloat16:
+            # npz has no bf16: store the raw bits; restore() re-views via
+            # the template dtype.
+            arr = arr.view(np.uint16)
+        flat[key] = arr
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"#{p.idx}"
+    return str(p)
+
+
+def save(directory: str, step: int, params, opt_state=None, extra: dict | None = None,
+         keep: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    tmp = tempfile.mkdtemp(dir=directory)
+    np.savez(os.path.join(tmp, "params.npz"), **_flatten(params))
+    if opt_state is not None:
+        np.savez(os.path.join(tmp, "opt_state.npz"), **_flatten(opt_state))
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump({"step": step, **(extra or {})}, f)
+    final = os.path.join(directory, f"step_{step:08d}")
+    os.rename(tmp, final)
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: str, keep: int) -> None:
+    ckpts = sorted(d for d in os.listdir(directory)
+                   if re.fullmatch(r"step_\d{8}", d))
+    for d in ckpts[:-keep]:
+        full = os.path.join(directory, d)
+        for f in os.listdir(full):
+            os.unlink(os.path.join(full, f))
+        os.rmdir(full)
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    ckpts = sorted(d for d in os.listdir(directory)
+                   if re.fullmatch(r"step_\d{8}", d))
+    return int(ckpts[-1][5:]) if ckpts else None
+
+
+def restore(directory: str, template, step: int | None = None,
+            name: str = "params.npz"):
+    """Restore a pytree matching `template`'s structure."""
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}", name)
+    data = np.load(path)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for pth, leaf in leaves:
+        key = _SEP.join(_path_str(p) for p in pth)
+        arr = data[key]
+        if (leaf.dtype == jax.numpy.bfloat16
+                and arr.dtype == np.uint16):
+            arr = arr.view(jax.numpy.bfloat16)
+        out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), out)
+
+
+def meta(directory: str, step: int | None = None) -> dict:
+    step = step if step is not None else latest_step(directory)
+    with open(os.path.join(directory, f"step_{step:08d}", "meta.json")) as f:
+        return json.load(f)

@@ -1,0 +1,18 @@
+"""The paper's primary contribution: aging-aware CPU core management.
+
+Public API:
+  aging       — NBTI reaction-diffusion physics (Eq. 1, 2, recursion)
+  variation   — process-variation f0 sampling
+  temperature — Table-1 C-state temperature/stress model
+  mapping     — Algorithm 1 (Task-to-Core Mapping)
+  idling      — Algorithm 2 (Selective Core Idling + reaction function)
+  manager     — CoreManager runtime (proposed + linux + least-aged policies)
+  carbon      — embodied-carbon amortization estimates
+"""
+from repro.core import aging, carbon, idling, mapping, temperature, variation
+from repro.core.manager import CoreManager, ManagerMetrics, Policy
+
+__all__ = [
+    "aging", "carbon", "idling", "mapping", "temperature", "variation",
+    "CoreManager", "ManagerMetrics", "Policy",
+]

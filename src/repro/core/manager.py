@@ -1,0 +1,325 @@
+"""CoreManager — the per-server aging-aware CPU core management runtime.
+
+This is the paper's contribution as a deployable component (Fig. 3): it
+owns the per-core aging state of one inference server's CPU, routes every
+CPU inference task through a task-to-core policy, and (for the proposed
+technique) periodically runs Selective Core Idling.
+
+Policies:
+  * PROPOSED   — Algorithm 1 mapping + Algorithm 2 selective idling.
+  * LINUX      — probabilistic task->core model of a stock Linux LLM
+                 inference server (built from captured CPU data, paper
+                 §6.1.1); all cores always C0.
+  * LEAST_AGED — Zhao'23: assign away from aged cores using cumulative
+                 executed work as the age estimate; all cores always C0.
+
+The manager is exact about NBTI bookkeeping: a core's dVth advances lazily
+with the ADF of the (C-state, allocated) regime it was in, and every
+regime change first settles the elapsed interval under the old ADF.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+import numpy as np
+
+from repro.core import aging, idling, mapping, temperature, variation
+from repro.core.temperature import CState
+
+
+class Policy(enum.Enum):
+    PROPOSED = "proposed"
+    LINUX = "linux"
+    LEAST_AGED = "least-aged"
+
+
+OVERSUBSCRIBED = -1  # sentinel core id for tasks that didn't get a core
+
+
+@dataclasses.dataclass
+class ManagerMetrics:
+    """Accumulated observability for one server's CPU."""
+
+    oversub_task_seconds: float = 0.0   # integral of T_oversub (paper §3.3)
+    idle_norm_samples: list = dataclasses.field(default_factory=list)
+    active_count_samples: list = dataclasses.field(default_factory=list)
+    task_count_samples: list = dataclasses.field(default_factory=list)
+    assigns: int = 0
+    oversub_assigns: int = 0
+
+
+class CoreManager:
+    def __init__(
+        self,
+        num_cores: int,
+        policy: Policy = Policy.PROPOSED,
+        aging_params: aging.AgingParams = aging.DEFAULT_PARAMS,
+        variation_params: variation.VariationParams | None = None,
+        rng: np.random.Generator | None = None,
+        idling_period_s: float = 1.0,
+        linux_stickiness: float = 0.3,
+    ):
+        self.num_cores = num_cores
+        self.policy = policy
+        self.params = aging_params
+        self.idling_period_s = idling_period_s
+        self.rng = rng if rng is not None else np.random.default_rng(0)
+        vp = variation_params or variation.VariationParams(
+            f_nominal=aging_params.f_nominal)
+        self.f0 = variation.sample_initial_frequencies(vp, num_cores, self.rng)
+
+        n = num_cores
+        self.dvth = np.zeros(n)
+        self.c_state = np.full(n, CState.ACTIVE, dtype=np.int8)
+        self.task_of_core = np.full(n, -1, dtype=np.int64)   # task id or -1
+        self.idle_history = np.zeros((n, mapping.IDLE_HISTORY_LEN))
+        self.hist_pos = np.zeros(n, dtype=np.int64)
+        self.idle_since = np.zeros(n)        # when core last became unassigned
+        self.last_update = np.zeros(n)       # last dvth settlement time
+        self.cum_work = np.zeros(n)          # least-aged baseline age proxy
+        self.core_of_task: dict[int, int] = {}
+        self.task_start: dict[int, float] = {}
+        self.oversub_tasks: set[int] = set()
+        self.linux_stickiness = linux_stickiness
+        self._linux_last_core = -1
+        self.metrics = ManagerMetrics()
+        self.now = 0.0
+
+    # ------------------------------------------------------------------ #
+    # aging bookkeeping
+    # ------------------------------------------------------------------ #
+    def _regime(self, i: int) -> tuple[float, float]:
+        """(temperature C, stress Y) of core i's current regime."""
+        cs = CState(int(self.c_state[i]))
+        allocated = self.task_of_core[i] >= 0
+        return (temperature.core_temperature_c(cs, allocated),
+                temperature.core_stress(cs, allocated))
+
+    def _settle(self, i: int, now: float) -> None:
+        """Advance core i's dVth from last_update to `now` under its
+        current regime. Must be called BEFORE any regime change."""
+        tau = now - self.last_update[i]
+        if tau > 0.0:
+            t_c, y = self._regime(i)
+            a = self.params.K * _adf_unscaled_cached(self.params, t_c) if y > 0 else 0.0
+            self.dvth[i] = aging.advance_dvth_scalar(
+                self.params, float(self.dvth[i]), a, tau)
+            self.last_update[i] = now
+
+    def settle_all(self, now: float) -> None:
+        """Vectorized settlement of every core (used by the periodic path
+        and by metric snapshots; mirrors the Pallas aging_update kernel)."""
+        tau = now - self.last_update
+        if not (tau > 0).any():
+            self.now = max(self.now, now)
+            return
+        allocated = self.task_of_core >= 0
+        active = self.c_state == CState.ACTIVE
+        temps = np.where(
+            active,
+            np.where(allocated, temperature.TEMP_ACTIVE_ALLOCATED_C,
+                     temperature.TEMP_ACTIVE_UNALLOCATED_C),
+            temperature.TEMP_DEEP_IDLE_C,
+        )
+        stress = np.where(active, temperature.STRESS_ACTIVE,
+                          temperature.STRESS_DEEP_IDLE)
+        adf_vals = aging.adf(self.params, temps, stress)
+        self.dvth = aging.advance_dvth(self.params, self.dvth, adf_vals,
+                                       np.maximum(tau, 0.0))
+        self.last_update = np.maximum(self.last_update, now)
+        self.now = max(self.now, now)
+
+    # ------------------------------------------------------------------ #
+    # task lifecycle
+    # ------------------------------------------------------------------ #
+    def assign(self, task_id: int, now: float) -> float:
+        """Route one CPU inference task to a core (Algorithm 1 / baseline).
+
+        Returns the execution speed factor (degraded f / nominal f) the
+        simulator should apply to the task duration; oversubscribed tasks
+        additionally share cores, handled by the caller via load factor.
+        """
+        self.now = max(self.now, now)
+        self.metrics.assigns += 1
+        active_mask = self.c_state == CState.ACTIVE
+        assigned_mask = self.task_of_core >= 0
+
+        if self.policy is Policy.PROPOSED:
+            core = mapping.select_core(active_mask, assigned_mask,
+                                       self.idle_history)
+        elif self.policy is Policy.LEAST_AGED:
+            core = self._select_least_work(active_mask, assigned_mask)
+        else:
+            core = self._select_linux(active_mask, assigned_mask)
+
+        if core < 0:
+            self.oversub_tasks.add(task_id)
+            self.core_of_task[task_id] = OVERSUBSCRIBED
+            self.task_start[task_id] = now
+            self.metrics.oversub_assigns += 1
+            # Oversubscribed tasks time-share already-busy cores; nominal
+            # frequency of the fastest busy core bounds their speed.
+            return float(np.max(self._frequencies_now(settle=False)))
+
+        # End the core's idle period -> record idle duration (Alg. 1 input).
+        idle_dur = now - self.idle_since[core]
+        mapping.record_idle_end(self.idle_history, self.hist_pos, core,
+                                max(idle_dur, 0.0))
+        self._settle(core, now)          # settle idle regime
+        self.task_of_core[core] = task_id
+        self.core_of_task[task_id] = core
+        self.task_start[task_id] = now
+        return aging.frequency_scalar(self.params, float(self.f0[core]),
+                                      float(self.dvth[core]))
+
+    def release(self, task_id: int, now: float) -> None:
+        self.now = max(self.now, now)
+        core = self.core_of_task.pop(task_id, None)
+        start = self.task_start.pop(task_id, now)
+        if core is None:
+            return
+        if core == OVERSUBSCRIBED:
+            self.oversub_tasks.discard(task_id)
+            self.metrics.oversub_task_seconds += now - start
+            self._promote_oversubscribed(now)
+            return
+        self._settle(core, now)          # settle allocated regime
+        self.cum_work[core] += now - start
+        self.task_of_core[core] = -1
+        self.idle_since[core] = now
+        self._promote_oversubscribed(now)
+
+    def _promote_oversubscribed(self, now: float) -> None:
+        """When a core frees up, move a waiting oversubscribed task onto it."""
+        while self.oversub_tasks:
+            active_mask = self.c_state == CState.ACTIVE
+            assigned_mask = self.task_of_core >= 0
+            free = active_mask & ~assigned_mask
+            if not free.any():
+                return
+            task_id = min(self.oversub_tasks)  # FIFO by id (ids are ordered)
+            self.oversub_tasks.discard(task_id)
+            self.metrics.oversub_task_seconds += now - self.task_start[task_id]
+            core = mapping.select_core(active_mask, assigned_mask,
+                                       self.idle_history)
+            idle_dur = now - self.idle_since[core]
+            mapping.record_idle_end(self.idle_history, self.hist_pos, core,
+                                    max(idle_dur, 0.0))
+            self._settle(core, now)
+            self.task_of_core[core] = task_id
+            self.core_of_task[task_id] = core
+            self.task_start[task_id] = now
+
+    # ------------------------------------------------------------------ #
+    # baseline selectors
+    # ------------------------------------------------------------------ #
+    def _select_least_work(self, active_mask, assigned_mask) -> int:
+        cand = active_mask & ~assigned_mask
+        if not cand.any():
+            return -1
+        return int(np.argmin(np.where(cand, self.cum_work, np.inf)))
+
+    def _select_linux(self, active_mask, assigned_mask) -> int:
+        """Probabilistic model of stock-Linux task placement: CFS mostly
+        picks an idle core but exhibits cache-affinity stickiness (captured
+        distribution per Wilkins'24 is skewed, not uniform)."""
+        cand = np.flatnonzero(active_mask & ~assigned_mask)
+        if cand.size == 0:
+            return -1
+        last = self._linux_last_core
+        if last in cand and self.rng.random() < self.linux_stickiness:
+            core = last
+        else:
+            # Skewed preference for low-numbered cores (topology order),
+            # matching the packed distributions seen in server captures.
+            w = 1.0 / (1.0 + 0.05 * np.arange(cand.size))
+            core = int(self.rng.choice(cand, p=w / w.sum()))
+        self._linux_last_core = core
+        return core
+
+    # ------------------------------------------------------------------ #
+    # periodic control (Algorithm 2) + metrics
+    # ------------------------------------------------------------------ #
+    def periodic(self, now: float) -> None:
+        """Run once per idling period: settle aging accurately, sample
+        metrics, and (PROPOSED only) execute Selective Core Idling."""
+        self.settle_all(now)
+        n = self.num_cores
+        active = int((self.c_state == CState.ACTIVE).sum())
+        assigned = int((self.task_of_core >= 0).sum())
+        oversub = len(self.oversub_tasks)
+        self.metrics.idle_norm_samples.append((active - assigned - oversub) / n)
+        self.metrics.active_count_samples.append(active)
+        self.metrics.task_count_samples.append(assigned + oversub)
+        self.metrics.oversub_task_seconds += oversub * self.idling_period_s
+
+        if self.policy is not Policy.PROPOSED:
+            return
+        corr = idling.core_correction(n, active, assigned, oversub)
+        to_idle, to_wake = idling.apply_correction(
+            corr,
+            self.c_state == CState.ACTIVE,
+            self.task_of_core >= 0,
+            self.dvth,
+        )
+        for i in to_idle:
+            # settle_all already brought core i to `now`; close its idle
+            # window and power-gate.
+            idle_dur = now - self.idle_since[i]
+            mapping.record_idle_end(self.idle_history, self.hist_pos, int(i),
+                                    max(idle_dur, 0.0))
+            self.c_state[i] = CState.DEEP_IDLE
+        for i in to_wake:
+            self.c_state[i] = CState.ACTIVE
+            self.idle_since[i] = now
+        if len(to_wake):
+            self._promote_oversubscribed(now)
+
+    # ------------------------------------------------------------------ #
+    # observability
+    # ------------------------------------------------------------------ #
+    def _frequencies_now(self, settle: bool = True) -> np.ndarray:
+        if settle:
+            self.settle_all(self.now)
+        return aging.frequency(self.params, self.f0, self.dvth)
+
+    def frequencies(self, now: float | None = None) -> np.ndarray:
+        if now is not None:
+            self.settle_all(now)
+        return self._frequencies_now(settle=False)
+
+    def frequency_cv(self, now: float | None = None) -> float:
+        f = self.frequencies(now)
+        return float(np.std(f) / np.mean(f))
+
+    def mean_frequency_degradation(self, now: float | None = None) -> float:
+        f = self.frequencies(now)
+        return float(np.mean(self.f0 - f))
+
+    def snapshot(self) -> dict:
+        f = self._frequencies_now(settle=False)
+        return {
+            "f0": self.f0.copy(),
+            "f": f,
+            "dvth": self.dvth.copy(),
+            "active": (self.c_state == CState.ACTIVE).copy(),
+            "cv": float(np.std(f) / np.mean(f)),
+            "mean_degradation": float(np.mean(self.f0 - f)),
+        }
+
+
+# Cache exp() factors per (params, temperature) — only 3 temperatures exist.
+_ADF_CACHE: dict[tuple[int, float], float] = {}
+
+
+def _adf_unscaled_cached(params: aging.AgingParams, temp_c: float) -> float:
+    key = (id(params), temp_c)
+    v = _ADF_CACHE.get(key)
+    if v is None:
+        import math
+        t_k = temp_c + 273.15
+        v = (math.exp(-params.E0 / (params.kB * t_k))
+             * math.exp(params.c_field * params.vdd / (params.kB * t_k)))
+        _ADF_CACHE[key] = v
+    return v

@@ -1,0 +1,1 @@
+"""Distribution: sharding rules + HLO collective analysis."""

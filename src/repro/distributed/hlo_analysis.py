@@ -1,0 +1,72 @@
+"""Parse compiled HLO text for collective traffic (roofline §collective).
+
+`cost_analysis()` does not expose collective bytes, so we scan the
+post-SPMD HLO for all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute ops and sum their result-buffer sizes. Shapes in the
+partitioned module are per-device, so totals are per-chip bytes.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Returns {op_name: bytes, ..., 'total': bytes, 'count': int}."""
+    totals: dict = defaultdict(int)
+    count = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if " = " not in stripped:
+            continue
+        op = None
+        for cand in COLLECTIVE_OPS:
+            # match the op invocation, not a variable name mention
+            if f" {cand}(" in stripped or f" {cand}-start(" in stripped:
+                op = cand
+                break
+        if op is None:
+            continue
+        # "-done" ops carry the same buffer as "-start"; count starts only.
+        if f" {op}-done(" in stripped:
+            continue
+        lhs = stripped.split(" = ", 1)[1]
+        # result shapes (possibly a tuple) precede " <op>(" / " <op>-start("
+        cut = lhs.find(f" {op}(")
+        if cut < 0:
+            cut = lhs.find(f" {op}-start(")
+        shapes_str = lhs[:cut] if cut >= 0 else lhs.split("(", 1)[0]
+        nbytes = sum(_shape_bytes(dt, dims)
+                     for dt, dims in _SHAPE_RE.findall(shapes_str))
+        totals[op] += nbytes
+        count += 1
+    totals["total"] = sum(totals[o] for o in COLLECTIVE_OPS if o in totals)
+    totals["count"] = count
+    return dict(totals)
+
+
+def duplicate_fusion_count(hlo_text: str) -> int:
+    """Rough remat indicator: repeated identical fusion computations."""
+    names = re.findall(r"^\s*%?(fused_computation[\w.]*)", hlo_text,
+                       re.MULTILINE)
+    return len(names) - len(set(names))

@@ -1,0 +1,180 @@
+"""Sharding rules: map model/cache/input arrays onto the production mesh.
+
+Strategy (baseline; §Perf iterates on it):
+  * weights: Megatron-style tensor parallelism on the `model` axis —
+    column-parallel for up-projections (wq/wk/wv/w_gate/w_up/q_up/...),
+    row-parallel for down-projections (wo/w_down/w_out); vocab sharded on
+    `model` (vocab is padded to a multiple of 2048 so 16 always divides).
+  * MoE experts: expert weights sharded on the d_ff dim over `model`
+    (tensor-parallel experts) — legal for any expert count (40, 8).
+  * activations/batch: sharded over (`pod`, `data`).
+  * KV caches: batch -> data; heads -> model when the head count divides,
+    else sequence -> model (flash-decoding style length sharding).
+
+Every rule is divisibility-guarded: a dim that the axis does not divide
+evenly is replicated instead (JAX rejects uneven jit-boundary shardings).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return math.prod(mesh.shape[a] for a in axis)
+    return mesh.shape[axis]
+
+
+def _fits(dim: int, mesh: Mesh, axis) -> bool:
+    return dim % axis_size(mesh, axis) == 0
+
+
+def dim_spec(mesh: Mesh, dim: int, axis):
+    """axis if it divides dim, else replicate."""
+    return axis if axis is not None and _fits(dim, mesh, axis) else None
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# --------------------------------------------------------------------- #
+# parameter specs
+# --------------------------------------------------------------------- #
+_COL_PARALLEL = {"wq", "wk", "wv", "w_gate", "w_up", "w_z", "w_x",
+                 "q_up", "k_up", "v_up", "q_down", "kv_down"}
+_ROW_PARALLEL = {"wo", "w_down", "w_out"}
+_VOCAB = {"embed", "unembed"}
+
+
+def _leaf_spec(name: str, shape: tuple, mesh: Mesh) -> P:
+    nd = len(shape)
+    if name in _VOCAB:
+        return P(dim_spec(mesh, shape[0], "model"), None)
+    if name in _COL_PARALLEL:
+        if nd == 3:  # MoE expert weight (E, D, F): shard F
+            return P(None, None, dim_spec(mesh, shape[2], "model"))
+        return P(None, dim_spec(mesh, shape[1], "model"))
+    if name in _ROW_PARALLEL:
+        if nd == 3:  # MoE (E, F, D): shard F
+            return P(None, dim_spec(mesh, shape[1], "model"), None)
+        return P(dim_spec(mesh, shape[0], "model"), None)
+    return P(*([None] * nd))  # norms, biases, router, conv, scalars
+
+
+def param_specs(abstract_params, mesh: Mesh):
+    """PartitionSpec tree for a (possibly layer-stacked) param tree.
+
+    Stacked layer params have a leading num_layers dim — the rule applies
+    to the trailing dims with a leading None.
+    """
+    def spec_for(path, leaf):
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = str(p.key)
+                break
+        shape = leaf.shape
+        # stacked layers: strip leading layer dim(s) heuristically — the
+        # registry of names is disjoint, so match on trailing dims.
+        strip = 0
+        under = {"layers", "enc_layers"}
+        path_keys = [str(p.key) for p in path if hasattr(p, "key")]
+        if path_keys and path_keys[0] in under:
+            strip = 1
+        base = _leaf_spec(name, shape[strip:], mesh)
+        return P(*([None] * strip), *base)
+
+    return jax.tree_util.tree_map_with_path(spec_for, abstract_params)
+
+
+# --------------------------------------------------------------------- #
+# cache specs
+# --------------------------------------------------------------------- #
+def kv_cache_spec(mesh: Mesh, shape: tuple) -> P:
+    """(L, B, S, H, D) — batch->data, heads->model else seq->model."""
+    _, b, s, h, _ = shape
+    b_ax = dim_spec(mesh, b, batch_axes(mesh))
+    h_ax = dim_spec(mesh, h, "model")
+    s_ax = None if h_ax else dim_spec(mesh, s, "model")
+    return P(None, b_ax, s_ax, h_ax, None)
+
+
+def latent_cache_spec(mesh: Mesh, shape: tuple) -> P:
+    """MLA latent (L, B, S, R) — batch->data, seq->model."""
+    _, b, s, _ = shape
+    return P(None, dim_spec(mesh, b, batch_axes(mesh)),
+             dim_spec(mesh, s, "model"), None)
+
+
+def ssm_cache_specs(mesh: Mesh, conv_shape: tuple, state_shape: tuple):
+    """conv (L,B,W-1,C), state (L,B,H,P,N) — batch->data, heads/chan->model."""
+    _, b, _, c = conv_shape
+    _, _, h, _, _ = state_shape
+    b_ax = dim_spec(mesh, b, batch_axes(mesh))
+    return (P(None, b_ax, None, dim_spec(mesh, c, "model")),
+            P(None, b_ax, dim_spec(mesh, h, "model"), None, None))
+
+
+def cache_specs(cfg: ModelConfig, abstract_cache, mesh: Mesh):
+    """Spec tree matching an abstract cache pytree (by key name).
+
+    Rules apply to TRAILING dims so arbitrary leading stack dims (layers,
+    hybrid groups, per-group layers) are handled uniformly:
+      k/v/xk/xv : (..., B, S, H, D)  batch->data, heads->model else S->model
+      latent    : (..., B, S, R)    batch->data, S->model
+      conv      : (..., B, W, C)    batch->data, channels->model
+      state     : (..., B, H, P, N) batch->data, heads->model
+    """
+    b_ax = batch_axes(mesh)
+
+    def spec_for(path, leaf):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        shape = leaf.shape
+        lead = [None] * (len(shape) - 4)
+        if name == "pos":
+            return P()
+        if name in ("k", "v", "xk", "xv"):
+            b, s, h, _ = shape[-4:]
+            h_ax = dim_spec(mesh, h, "model")
+            s_ax = None if h_ax else dim_spec(mesh, s, "model")
+            return P(*lead, dim_spec(mesh, b, b_ax), s_ax, h_ax, None)
+        if name == "latent":
+            lead = [None] * (len(shape) - 3)
+            b, s, _ = shape[-3:]
+            return P(*lead, dim_spec(mesh, b, b_ax),
+                     dim_spec(mesh, s, "model"), None)
+        if name == "conv":
+            lead = [None] * (len(shape) - 3)
+            b, _, c = shape[-3:]
+            return P(*lead, dim_spec(mesh, b, b_ax), None,
+                     dim_spec(mesh, c, "model"))
+        if name == "state":
+            b, h, _, _ = shape[-4:]
+            return P(*lead, dim_spec(mesh, b, b_ax),
+                     dim_spec(mesh, h, "model"), None, None)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec_for, abstract_cache)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def with_sharding(mesh: Mesh, abstract_tree, spec_tree):
+    """Attach shardings to a ShapeDtypeStruct tree (dry-run inputs)."""
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                          sharding=NamedSharding(mesh, s)),
+        abstract_tree, spec_tree,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)))

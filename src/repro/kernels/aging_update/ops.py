@@ -1,0 +1,32 @@
+"""jit'd public wrapper: pads to the kernel block size, dispatches to the
+Pallas kernel (interpret=True on CPU) or the jnp oracle."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.aging_update.aging_update import BLOCK, aging_update
+from repro.kernels.aging_update.ref import aging_update_ref
+
+
+def advance_fleet(dvth, temp_c, stress, tau, params, use_kernel=True,
+                  interpret=None):
+    """Advance a fleet of cores' dVth. Inputs (N,); returns (N,) f32."""
+    dvth = jnp.asarray(dvth, jnp.float32)
+    temp_c = jnp.asarray(temp_c, jnp.float32)
+    stress = jnp.asarray(stress, jnp.float32)
+    tau = jnp.asarray(tau, jnp.float32)
+    if not use_kernel:
+        return aging_update_ref(dvth, temp_c, stress, tau, params)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n = dvth.shape[0]
+    pad = (-n) % BLOCK
+    if pad:
+        dvth = jnp.pad(dvth, (0, pad))
+        temp_c = jnp.pad(temp_c, (0, pad))
+        stress = jnp.pad(stress, (0, pad))
+        tau = jnp.pad(tau, (0, pad))
+    out = aging_update(dvth, temp_c, stress, tau, params,
+                       interpret=interpret)
+    return out[:n]

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the aging_update kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def aging_update_ref(dvth, temp_c, stress, tau, params):
+    dvth = dvth.astype(jnp.float32)
+    t_k = temp_c.astype(jnp.float32) + 273.15
+    adf = (params.K * jnp.exp(-params.E0 / (params.kB * t_k))
+           * jnp.exp(params.c_field * params.vdd / (params.kB * t_k))
+           * jnp.where(stress > 0, stress, 1.0) ** params.n)
+    live = (stress > 0) & (tau > 0)
+    safe = jnp.where(live, adf, 1.0)
+    eff_t = (dvth / safe) ** (1.0 / params.n)
+    new = safe * (eff_t + tau) ** params.n
+    return jnp.where(live, new, dvth)

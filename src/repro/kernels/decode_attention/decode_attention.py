@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: single-token decode attention against a KV cache
+(flash-decoding style).
+
+One query token per sequence attends to a long cache: grid (B, nK)
+streams KV blocks HBM->VMEM while (m, l, acc) scratch carries the online
+softmax; the (H, S) score matrix never exists. This is the decode-side
+memory-bound hot spot — the kernel's roofline is HBM bandwidth on the
+cache stream, so block_k is sized to keep the DMA pipeline busy
+(block_k x Hkv x D tiles, 128-aligned). Supports GQA (grouped query
+heads share cache heads) and sliding windows, with per-sequence `pos`
+masking for continuous batching.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, block_k, n_k, window, groups):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    pos = pos_ref[0]                                  # () int32, valid len
+    q = q_ref[0].astype(jnp.float32)                  # (H, D)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, Hkv, D)
+    v = v_ref[0].astype(jnp.float32)
+    hkv = k.shape[1]
+    h, d = q.shape
+    qg = q.reshape(hkv, groups, d)
+    # scores (Hkv, G, bk) -> (H, bk)
+    s = jnp.einsum("egd,ked->egk", qg, k).reshape(h, -1) * scale
+
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (h, block_k), 1)
+    mask = k_pos < pos
+    if window:
+        mask &= k_pos >= pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])                   # (H, bk)
+    l_new = l_scr[...] * alpha + p.sum(axis=-1)
+    pv = jnp.einsum("egk,ked->egd", p.reshape(hkv, groups, -1),
+                    v).reshape(h, d)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_k",
+                                             "interpret"))
+def decode_attention(q, k_cache, v_cache, pos, *, window=0, block_k=512,
+                     interpret=False):
+    """q: (B, H, D); caches: (B, S, Hkv, D); pos: (B,) int32 valid lengths
+    (current token already written at pos-1). Returns (B, H, D)."""
+    b, h, d = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    groups = h // hkv
+    n_k = s // block_k
+    grid = (b, n_k)
+    kernel = functools.partial(_kernel, scale=d ** -0.5, block_k=block_k,
+                               n_k=n_k, window=window, groups=groups)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bb, ki: (bb,)),
+            pl.BlockSpec((1, h, d), lambda bb, ki: (bb, 0, 0)),
+            pl.BlockSpec((1, block_k, hkv, d), lambda bb, ki: (bb, ki, 0, 0)),
+            pl.BlockSpec((1, block_k, hkv, d), lambda bb, ki: (bb, ki, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda bb, ki: (bb, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((h,), jnp.float32),
+            pltpu.VMEM((h,), jnp.float32),
+            pltpu.VMEM((h, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos, q, k_cache, v_cache)

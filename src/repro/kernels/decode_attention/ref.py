@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for decode_attention (delegates to the model's own
+decode attention math, which tests also exercise independently)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import decode_attention as _model_decode
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos, *, window=0):
+    """q: (B,H,D); caches (B,S,Hkv,D); pos (B,). Returns (B,H,D)."""
+    out = _model_decode(q[:, None].swapaxes(1, 1), k_cache, v_cache,
+                        pos, window=window)
+    # _model_decode wants q (B,1,H,D)
+    return out[:, 0]
+
+
+def decode_attention_ref_explicit(q, k_cache, v_cache, pos, *, window=0):
+    """Fully-explicit fp32 oracle."""
+    b, h, d = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    rep = h // hkv
+    k = jnp.repeat(k_cache, rep, axis=2).astype(jnp.float32)  # (B,S,H,D)
+    v = jnp.repeat(v_cache, rep, axis=2).astype(jnp.float32)
+    scores = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                        k) * d ** -0.5
+    idx = jnp.arange(s)[None, None, :]
+    p = pos[:, None, None]
+    mask = idx < p
+    if window:
+        mask &= idx >= p - window
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jnp.exp(scores - scores.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    return jnp.einsum("bhs,bshd->bhd", probs, v).astype(q.dtype)

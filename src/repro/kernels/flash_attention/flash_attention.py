@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: blocked causal GQA flash attention (prefill/train).
+
+Online-softmax attention that never materializes the (S, S) score matrix:
+grid (B, H, nQ, nK) revisits each output block across the KV axis with
+running (m, l, acc) scratch in VMEM. Block shapes are MXU-aligned
+(block_q x head_dim and block_k x head_dim tiles, multiples of 128 on the
+contracting dims for the 128x128 systolic array). GQA is expressed in the
+kernel's index_map: query head h reads KV head h * Hkv // H, so grouped
+heads share the same KV block without a repeated-KV copy in HBM.
+
+Supports causal masking and sliding-window (Mixtral SWA) masking.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, block_q, block_k, n_k, causal, window):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)          # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)          # (bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_scr[...] * alpha + p.sum(axis=-1)
+    acc_new = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                              "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_k=128, interpret=False):
+    """q: (B, H, S, D); k/v: (B, Hkv, S, D) with H % Hkv == 0.
+    Returns (B, H, S, D). Sequence length must divide the block sizes
+    (ops.py pads)."""
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    scale = d ** -0.5
+    n_q = s // block_q
+    n_k = s // block_k
+    grid = (b, h, n_q, n_k)
+
+    kernel = functools.partial(_kernel, scale=scale, block_q=block_q,
+                               block_k=block_k, n_k=n_k, causal=causal,
+                               window=window)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bb, hh, qi, ki: (bb, hh * hkv // h, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bb, hh, qi, ki: (bb, hh * hkv // h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

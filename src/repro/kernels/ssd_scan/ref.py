@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for ssd_scan: the naive sequential recurrence."""
+from __future__ import annotations
+
+from repro.models.mamba2 import ssd_reference
+
+
+def ssd_scan_ref(x, dt, a_log, b, c):
+    """Same contract as ssd_scan; returns y only (state is internal)."""
+    y, _ = ssd_reference(x, dt, a_log, b, c)
+    return y

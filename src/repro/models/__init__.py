@@ -1,0 +1,5 @@
+"""Model zoo public API."""
+from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig
+from repro.models.model import Model
+
+__all__ = ["INPUT_SHAPES", "InputShape", "ModelConfig", "Model"]

@@ -1,0 +1,221 @@
+"""Attention cores: GQA (full / sliding-window / causal), decode-with-cache,
+and cross-attention. Pure-jnp formulations that GSPMD can partition; the
+Pallas TPU kernels in repro/kernels implement the same math for the
+compute hot spots and are validated against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k: jax.Array, num_heads: int) -> jax.Array:
+    """(B, S, Hkv, D) -> (B, S, H, D) by group broadcast."""
+    b, s, hkv, d = k.shape
+    if hkv == num_heads:
+        return k
+    rep = num_heads // hkv
+    return jnp.repeat(k, rep, axis=2)
+
+
+def causal_mask(q_len: int, kv_len: int, window: int = 0,
+                q_offset: int = 0) -> jax.Array:
+    """(q_len, kv_len) boolean mask: True = attend.
+
+    q position i (global i+q_offset) attends kv position j iff
+    j <= i+q_offset and (window == 0 or j > i+q_offset-window).
+    """
+    qi = jnp.arange(q_len)[:, None] + q_offset
+    kj = jnp.arange(kv_len)[None, :]
+    m = kj <= qi
+    if window:
+        m &= kj > qi - window
+    return m
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array,
+              mask: jax.Array | None = None,
+              scale: float | None = None) -> jax.Array:
+    """Batched multi-head attention.
+
+    q: (B, Sq, H, D), k/v: (B, Skv, Hkv, D) with H % Hkv == 0.
+    mask: broadcastable to (B, H, Sq, Skv), True = attend.
+    """
+    h = q.shape[2]
+    k = _repeat_kv(k, h)
+    v = _repeat_kv(v, h)
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def self_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                   q_offset: int = 0, scale: float | None = None,
+                   chunk: int = 0):
+    """Self-attention over a full sequence (train / prefill path).
+    chunk > 0 selects the online-softmax blocked formulation (§Perf)."""
+    if chunk and chunk < k.shape[1]:
+        return chunked_self_attention(q, k, v, causal=causal, window=window,
+                                      q_offset=q_offset, scale=scale,
+                                      chunk=chunk)
+    mask = None
+    if causal:
+        mask = causal_mask(q.shape[1], k.shape[1], window, q_offset)
+        mask = mask[None, None]
+    return attention(q, k, v, mask, scale)
+
+
+def chunked_self_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                           scale=None, chunk=1024):
+    """Flash-style attention in pure JAX: lax.scan over KV chunks with a
+    running (m, l, acc) online softmax, so the (Sq, Skv) score matrix is
+    never materialized — the XLA-compilable twin of the Pallas
+    flash_attention kernel (memory-term optimization for prefill_32k,
+    see EXPERIMENTS.md §Perf). Differentiable; exact (same fp32 math).
+    """
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    if skv % chunk:
+        pad = chunk - skv % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = k.shape[1] // chunk
+    hkv = k.shape[2]
+    dv = v.shape[-1]          # may differ from qk dim (MLA: 96 vs 64)
+    k = _repeat_kv(k, h)
+    v = _repeat_kv(v, h)
+    scale = scale if scale is not None else d ** -0.5
+    kc = k.reshape(b, n_chunks, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, h, dv).transpose(1, 0, 2, 3, 4)
+    q32 = q.astype(jnp.float32)
+    q_pos = jnp.arange(sq) + q_offset
+
+    def step(carry, inp):
+        m, l, acc = carry
+        ci, kb, vb = inp
+        s = jnp.einsum("bqhd,bkhd->bhqk", q32,
+                       kb.astype(jnp.float32)) * scale
+        k_pos = ci * chunk + jnp.arange(chunk)
+        mask = k_pos[None, :] <= (q_pos[:, None] if causal
+                                  else jnp.full((sq, 1), skv))
+        if window:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        mask &= (k_pos < skv)[None, :]
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    acc0 = jnp.zeros((b, h, sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0), (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    del hkv
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, window: int = 0,
+                     scale: float | None = None) -> jax.Array:
+    """Single-token attention against a KV cache.
+
+    q: (B, 1, H, D); k_cache/v_cache: (B, S_max, Hkv, D); pos: () or (B,)
+    int32 — number of valid cache entries *including* the current token
+    (the caller writes the new k/v at index pos-1 before calling).
+    A vector pos supports continuous batching (per-slot lengths).
+    """
+    s_max = k_cache.shape[1]
+    idx = jnp.arange(s_max)[None, None, None, :]          # (1,1,1,S)
+    p = pos if pos.ndim == 0 else pos[:, None, None, None]
+    valid = idx < p
+    if window:
+        valid &= idx >= p - window
+    return attention(q, k_cache, v_cache, valid, scale)
+
+
+def cache_update(k_cache: jax.Array, v_cache: jax.Array, k_new: jax.Array,
+                 v_new: jax.Array, pos: jax.Array):
+    """Write one token's k/v at index `pos` (scalar, or (B,) per-slot for
+    continuous batching). cache (B, S, Hkv, D), new (B, 1, Hkv, D)."""
+    k_new = k_new.astype(k_cache.dtype)
+    v_new = v_new.astype(v_cache.dtype)
+    if pos.ndim == 0:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new, pos,
+                                                      axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new, pos,
+                                                      axis=1)
+    else:
+        b = jnp.arange(k_cache.shape[0])
+        k_cache = k_cache.at[b, pos].set(k_new[:, 0])
+        v_cache = v_cache.at[b, pos].set(v_new[:, 0])
+    return k_cache, v_cache
+
+
+def cross_attention(q: jax.Array, k_mem: jax.Array, v_mem: jax.Array,
+                    scale: float | None = None) -> jax.Array:
+    """Encoder-decoder cross attention (no mask: full encoder memory)."""
+    return attention(q, k_mem, v_mem, None, scale)
+
+
+def decode_attention_length_sharded(q, k_cache, v_cache, pos, window=0,
+                                    scale=None):
+    """Flash-decoding-style decode attention that STAYS in the cache's
+    length-sharded layout (S -> model axis) instead of letting GSPMD
+    reshard the multi-GB cache to head sharding every layer (§Perf).
+
+    Scores/probs are explicitly constrained to S->model; the softmax
+    statistics and the output contraction reduce over the sharded axis,
+    so the only collectives are tiny (B,H)-stat and (B,H,D)-output
+    all-reduces. Falls back to plain decode_attention without a mesh.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty or "model" not in mesh.axis_names:
+        return decode_attention(q, k_cache, v_cache, pos, window, scale)
+    P = jax.sharding.PartitionSpec
+    b, _, h, d = q.shape
+    s_max, hkv = k_cache.shape[1], k_cache.shape[2]
+    groups = h // hkv
+    bax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bsz = 1
+    for a in bax:
+        bsz *= mesh.shape[a]
+    b_ax = bax if (bax and b % bsz == 0) else None
+    s_ax = "model" if s_max % mesh.shape["model"] == 0 else None
+    scale = scale if scale is not None else d ** -0.5
+
+    # keep q replicated across model (it is one token; recompute is free)
+    qg = jax.lax.with_sharding_constraint(
+        q[:, 0].reshape(b, hkv, groups, d), P(b_ax, None, None, None))
+    kc = jax.lax.with_sharding_constraint(
+        k_cache, P(b_ax, s_ax, None, None))
+    vc = jax.lax.with_sharding_constraint(
+        v_cache, P(b_ax, s_ax, None, None))
+
+    scores = jnp.einsum("begd,bsed->begs", qg.astype(jnp.float32),
+                        kc.astype(jnp.float32)) * scale
+    scores = jax.lax.with_sharding_constraint(
+        scores, P(b_ax, None, None, s_ax))
+    idx = jnp.arange(s_max)[None, None, None, :]
+    p = pos if pos.ndim == 0 else pos[:, None, None, None]
+    valid = idx < p
+    if window:
+        valid &= idx >= p - window
+    scores = jnp.where(valid, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)       # reduce over S shard
+    probs = jnp.exp(scores - m)
+    l = jnp.sum(probs, axis=-1, keepdims=True)
+    out = jnp.einsum("begs,bsed->begd", probs, vc.astype(jnp.float32))
+    out = out / jnp.maximum(l, 1e-30)
+    out = jax.lax.with_sharding_constraint(out, P(b_ax, None, None, None))
+    return out.reshape(b, 1, h, d).astype(q.dtype)

@@ -1,0 +1,68 @@
+"""Common neural layers: RMSNorm, RoPE, SwiGLU, embeddings. Pure JAX."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight).astype(dtype)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies for rotary embeddings, shape (head_dim//2,)."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary position embedding.
+
+    x: (..., S, H, D) with D even; positions: broadcastable to (..., S).
+    Uses the half-split convention (rotate_half), matching Llama.
+    """
+    d = x.shape[-1]
+    inv_freq = rope_frequencies(d, theta)                  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (...,S,D/2)
+    cos = jnp.cos(angles)[..., None, :]                    # (...,S,1,D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    """Token embedding lookup against a (padded_vocab, d_model) table."""
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(h: jax.Array, table: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Project to (padded) vocabulary logits; padded ids masked to -inf."""
+    logits = jnp.einsum("...d,vd->...v", h, table)
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, jnp.finfo(logits.dtype).min, logits)
+    return logits
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       mask: jax.Array | None = None) -> jax.Array:
+    """Mean next-token cross entropy. logits (B,S,V), labels (B,S)."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,226 @@
+"""Mamba2 / SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Per head h with state (P, N):   (P = head dim, N = ssm state dim)
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * x_t  (outer)  B_t
+    y_t = h_t @ C_t + D * x_t
+
+Training/prefill use the chunked SSD algorithm: an intra-chunk quadratic
+("attention-like") term plus an inter-chunk recurrence over chunk states
+(lax.scan), which is the TPU-friendly formulation (dense MXU matmuls per
+chunk, O(L) total).  `ssd_reference` is the naive sequential scan oracle.
+
+Projections are kept *separate* (z, x, B, C, dt) rather than one packed
+in_proj — mathematically identical to the reference implementation and
+cleaner to shard (x/z on d_inner over the model axis). Documented in
+DESIGN.md.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm
+
+
+def segsum(a: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{j < tau <= i} a[..., tau].
+
+    a: (..., Q) -> (..., Q, Q), lower-triangular valid (i >= j), -inf above.
+    """
+    q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)                     # (..., Q)
+    diff = cum[..., :, None] - cum[..., None, :]     # s_i - s_j
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff + a[..., None, :] * 0.0, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a_log: jax.Array,
+                b: jax.Array, c: jax.Array, chunk: int,
+                h0: jax.Array | None = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x:  (B, L, H, P)   inputs (post-conv, post-activation)
+    dt: (B, L, H)      positive step sizes (softplus applied by caller)
+    a_log: (H,)        A = -exp(a_log)
+    b:  (B, L, N)      input gate (single group, broadcast over heads)
+    c:  (B, L, N)      output gate
+    h0: (B, H, P, N)   initial state (None = zeros)
+
+    Returns (y (B,L,H,P), h_final (B,H,P,N)).
+    """
+    bsz, l, h, p = x.shape
+    n = b.shape[-1]
+    if l % chunk:
+        # zero-dt padding is exact: alpha = exp(0) = 1, update term = 0,
+        # so padded steps neither move the state nor contribute output.
+        pad = chunk - l % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        y, h_final = ssd_chunked(x, dt, a_log, b, c, chunk, h0)
+        return y[:, :l], h_final
+    nc = l // chunk
+    f32 = jnp.float32
+
+    A = -jnp.exp(a_log.astype(f32))                          # (H,)
+    dt = dt.astype(f32)
+    xr = x.reshape(bsz, nc, chunk, h, p)
+    br = b.reshape(bsz, nc, chunk, n).astype(f32)
+    cr = c.reshape(bsz, nc, chunk, n).astype(f32)
+    dtr = dt.reshape(bsz, nc, chunk, h)
+    a = dtr * A                                              # (B,nc,Q,H) <= 0
+    a_hq = jnp.moveaxis(a, -1, -2)                           # (B,nc,H,Q)
+    cum = jnp.cumsum(a_hq, axis=-1)                          # s_t
+
+    # ---- intra-chunk (diagonal) term ---------------------------------- #
+    L = jnp.exp(segsum(a_hq))                                # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bzqn,bzkn->bzqk", cr, br)           # (B,nc,Q,Q)
+    g = scores[:, :, None] * L                               # (B,nc,H,Q,Q)
+    xdt = xr.astype(f32) * dtr[..., None]                    # (B,nc,Q,H,P)
+    y_diag = jnp.einsum("bzhqk,bzkhp->bzqhp", g, xdt)
+
+    # ---- chunk states -------------------------------------------------- #
+    t = jnp.exp(cum[..., -1:] - cum)                         # (B,nc,H,Q)
+    s_c = jnp.einsum("bzhq,bzqn,bzqhp->bzhpn", t, br, xdt)   # (B,nc,H,P,N)
+    decay_chunk = jnp.exp(cum[..., -1])                      # (B,nc,H)
+
+    # ---- inter-chunk recurrence (scan over chunks) --------------------- #
+    h_init = (jnp.zeros((bsz, h, p, n), f32) if h0 is None
+              else h0.astype(f32))
+
+    def step(carry, inp):
+        s_chunk, dec = inp                                   # (B,H,P,N),(B,H)
+        new = dec[..., None, None] * carry + s_chunk
+        return new, carry                                    # emit h_prev
+
+    s_cs = jnp.moveaxis(s_c, 1, 0)                           # (nc,B,H,P,N)
+    decs = jnp.moveaxis(decay_chunk, 1, 0)                   # (nc,B,H)
+    h_final, h_prevs = jax.lax.scan(step, h_init, (s_cs, decs))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                    # (B,nc,H,P,N)
+
+    # ---- off-diagonal (state-passing) term ------------------------------ #
+    y_off = jnp.einsum("bzqn,bzhq,bzhpn->bzqhp", cr, jnp.exp(cum), h_prevs)
+
+    y = (y_diag + y_off).reshape(bsz, l, h, p).astype(x.dtype)
+    return y, h_final.astype(f32)
+
+
+def ssd_reference(x, dt, a_log, b, c, h0=None):
+    """Naive sequential recurrence oracle (fp32). Same signature/shapes."""
+    bsz, l, h, p = x.shape
+    n = b.shape[-1]
+    f32 = jnp.float32
+    A = -jnp.exp(a_log.astype(f32))
+    state = (jnp.zeros((bsz, h, p, n), f32) if h0 is None
+             else h0.astype(f32))
+
+    def step(carry, inp):
+        xt, dtt, bt, ct = inp                      # (B,H,P),(B,H),(B,N),(B,N)
+        alpha = jnp.exp(dtt * A)                   # (B,H)
+        upd = (dtt[..., None, None] * xt[..., None]
+               * bt[:, None, None, :])             # (B,H,P,N)
+        new = alpha[..., None, None] * carry + upd
+        yt = jnp.einsum("bhpn,bn->bhp", new, ct)
+        return new, yt
+
+    xs = (jnp.moveaxis(x.astype(f32), 1, 0), jnp.moveaxis(dt.astype(f32), 1, 0),
+          jnp.moveaxis(b.astype(f32), 1, 0), jnp.moveaxis(c.astype(f32), 1, 0))
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), state
+
+
+def ssd_decode_step(state, x, dt, a_log, b, c):
+    """One-token recurrent update.
+
+    state (B,H,P,N); x (B,H,P); dt (B,H); b/c (B,N).
+    Returns (y (B,H,P), new_state)."""
+    f32 = jnp.float32
+    A = -jnp.exp(a_log.astype(f32))
+    alpha = jnp.exp(dt.astype(f32) * A)
+    upd = dt.astype(f32)[..., None, None] * x.astype(f32)[..., None] \
+        * b.astype(f32)[:, None, None, :]
+    new = alpha[..., None, None] * state.astype(f32) + upd
+    y = jnp.einsum("bhpn,bn->bhp", new, c.astype(f32))
+    return y.astype(x.dtype), new
+
+
+# --------------------------------------------------------------------- #
+# full Mamba2 block (projections + causal conv + SSD + gated norm)
+# --------------------------------------------------------------------- #
+def _causal_conv(seq: jax.Array, kernel: jax.Array,
+                 prepend: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv1d. seq (B,L,C), kernel (W,C).
+    prepend: (B,W-1,C) history (decode) or None (zero left-pad)."""
+    w = kernel.shape[0]
+    if prepend is None:
+        prepend = jnp.zeros((seq.shape[0], w - 1, seq.shape[2]), seq.dtype)
+    full = jnp.concatenate([prepend.astype(seq.dtype), seq], axis=1)
+    out = jax.lax.conv_general_dilated(
+        full, kernel[:, None, :].astype(seq.dtype),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=seq.shape[2])
+    return out
+
+
+def mamba2_projections(h: jax.Array, lp: dict, cfg: ModelConfig):
+    """Shared pre-SSD computation. h: (B,L,D) -> (z, xbc, dt)."""
+    z = jnp.einsum("bld,de->ble", h, lp["w_z"])            # (B,L,di)
+    xin = jnp.einsum("bld,de->ble", h, lp["w_x"])          # (B,L,di)
+    bg = jnp.einsum("bld,dn->bln", h, lp["w_b"])           # (B,L,G*N)
+    cg = jnp.einsum("bld,dn->bln", h, lp["w_c"])           # (B,L,G*N)
+    dt = jnp.einsum("bld,dh->blh", h, lp["w_dt"])          # (B,L,H)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+    xbc = jnp.concatenate([xin, bg, cg], axis=-1)
+    return z, xbc, dt
+
+
+def mamba2_block(h: jax.Array, lp: dict, cfg: ModelConfig,
+                 use_ref: bool = False) -> jax.Array:
+    """Full-sequence Mamba2 block (train/prefill). h: (B,L,D)."""
+    bsz, l, _ = h.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    nh, p = cfg.ssm_heads, cfg.ssm_head_dim
+    resid = h
+    hn = rms_norm(h, lp["ln"], cfg.norm_eps)
+    z, xbc, dt = mamba2_projections(hn, lp, cfg)
+    xbc = jax.nn.silu(_causal_conv(xbc, lp["conv"]))
+    xin, bg, cg = jnp.split(xbc, [di, di + n], axis=-1)
+    xh = xin.reshape(bsz, l, nh, p)
+    ssd = ssd_reference if use_ref else ssd_chunked
+    kw = {} if use_ref else {"chunk": min(cfg.ssm_chunk, l)}
+    y, _ = ssd(xh, dt, lp["a_log"], bg, cg, **kw)
+    y = (y + lp["d_skip"][None, None, :, None] * xh).astype(xh.dtype)
+    y = y.reshape(bsz, l, di)
+    y = rms_norm(y * jax.nn.silu(z), lp["gate_ln"], cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, lp["w_out"])
+    return resid + out
+
+
+def mamba2_block_decode(h: jax.Array, lp: dict, cache: dict,
+                        cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    """One-token Mamba2 block. h: (B,1,D); cache {conv (B,W-1,C),
+    state (B,H,P,N)}."""
+    bsz = h.shape[0]
+    di, n = cfg.d_inner, cfg.ssm_state
+    nh, p = cfg.ssm_heads, cfg.ssm_head_dim
+    resid = h
+    hn = rms_norm(h, lp["ln"], cfg.norm_eps)
+    z, xbc, dt = mamba2_projections(hn, lp, cfg)           # L = 1
+    conv_hist = cache["conv"]
+    out = jax.nn.silu(_causal_conv(xbc, lp["conv"], prepend=conv_hist))
+    new_conv = jnp.concatenate([conv_hist, xbc.astype(conv_hist.dtype)],
+                               axis=1)[:, 1:]
+    xin, bg, cg = jnp.split(out[:, 0], [di, di + n], axis=-1)
+    xh = xin.reshape(bsz, nh, p)
+    y, new_state = ssd_decode_step(cache["state"], xh, dt[:, 0],
+                                   lp["a_log"], bg, cg)
+    y = (y + lp["d_skip"][None, :, None] * xh).astype(xh.dtype)
+    y = y.reshape(bsz, 1, di)
+    y = rms_norm(y * jax.nn.silu(z), lp["gate_ln"], cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, lp["w_out"])
+    return resid + out, {"conv": new_conv, "state": new_state}

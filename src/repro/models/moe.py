@@ -1,0 +1,158 @@
+"""Mixture-of-Experts FFN with top-k routing (GShard-style capacity).
+
+Implementation is the *sorted-capacity* formulation: per batch row, token
+slots are sorted by expert id, each expert processes a fixed-capacity
+contiguous buffer, and results scatter back weighted by the router gate.
+All shapes are static (jit-friendly); tokens beyond capacity are dropped
+(capacity_factor 1.25, like GShard/Switch). Sorting stays local to the
+batch row, so under batch->data sharding the dispatch never crosses data
+shards; expert weights are sharded on d_ff over the model axis (tensor-
+parallel experts), which keeps every expert-count (40, 8) legal on a
+16-way axis — see DESIGN.md §Distribution design.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def router_probs(x: jax.Array, w_router: jax.Array) -> jax.Array:
+    """(B,S,D) x (D,E) -> (B,S,E) softmax router probabilities (fp32)."""
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        w_router.astype(jnp.float32))
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def load_balance_loss(probs: jax.Array, expert_idx: jax.Array,
+                      num_experts: int) -> jax.Array:
+    """Switch-style auxiliary loss: E * sum_e f_e * P_e."""
+    # fraction of slots dispatched to each expert
+    counts = jnp.sum(jax.nn.one_hot(expert_idx, num_experts), axis=(1, 2))
+    f = counts / jnp.maximum(jnp.sum(counts, -1, keepdims=True), 1.0)  # (B,E)
+    p = jnp.mean(probs, axis=1)                                        # (B,E)
+    return num_experts * jnp.mean(jnp.sum(f * p, axis=-1))
+
+
+def moe_ffn(x: jax.Array, params: dict, cfg: ModelConfig
+            ) -> tuple[jax.Array, jax.Array]:
+    """Top-k MoE SwiGLU FFN. x: (B,S,D) -> (y (B,S,D), aux_loss ())."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    probs = router_probs(x, params["router"])                   # (B,S,E)
+    gate, expert_idx = jax.lax.top_k(probs, k)                  # (B,S,k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    aux = load_balance_loss(probs, expert_idx, e)
+
+    n_slots = s * k
+    capacity = max(1, min(
+        -(-int(n_slots * cfg.moe_capacity_factor) // e),  # ceil division
+        n_slots))
+
+    # --- per-row sorted dispatch ------------------------------------- #
+    e_flat = expert_idx.reshape(b, n_slots)                     # (B, S*k)
+    gate_flat = gate.reshape(b, n_slots)
+    tok_of_slot = jnp.repeat(jnp.arange(s), k)[None, :]         # (1, S*k)
+    order = jnp.argsort(e_flat, axis=-1, stable=True)           # (B, S*k)
+    e_sorted = jnp.take_along_axis(e_flat, order, axis=-1)
+    gate_sorted = jnp.take_along_axis(gate_flat, order, axis=-1)
+    tok_sorted = jnp.take_along_axis(
+        jnp.broadcast_to(tok_of_slot, (b, n_slots)), order, axis=-1)
+
+    # position of each slot within its expert's buffer
+    first = jax.vmap(
+        lambda row: jnp.searchsorted(row, row, side="left"))(e_sorted)
+    pos = jnp.arange(n_slots)[None, :] - first                  # (B, S*k)
+    keep = pos < capacity
+    dest = jnp.where(keep, e_sorted * capacity + pos, e * capacity)
+
+    # gather token activations into expert buffers (B, E*C+1, D)
+    x_slot = jnp.take_along_axis(x, tok_sorted[..., None], axis=1)
+    buf = jnp.zeros((b, e * capacity + 1, d), x.dtype)
+    buf = buf.at[jnp.arange(b)[:, None], dest].add(
+        jnp.where(keep[..., None], x_slot, 0))
+    buf = buf[:, : e * capacity].reshape(b, e, capacity, d)
+
+    # --- expert computation (SwiGLU, experts sharded on d_ff) --------- #
+    g = jnp.einsum("becd,edf->becf", buf, params["w_gate"])
+    u = jnp.einsum("becd,edf->becf", buf, params["w_up"])
+    y_buf = jnp.einsum("becf,efd->becd", jax.nn.silu(g) * u, params["w_down"])
+
+    # --- combine back ------------------------------------------------- #
+    y_buf = y_buf.reshape(b, e * capacity, d)
+    y_buf = jnp.concatenate([y_buf, jnp.zeros((b, 1, d), y_buf.dtype)], 1)
+    y_slot = jnp.take_along_axis(y_buf, dest[..., None], axis=1)  # (B,S*k,D)
+    y_slot = y_slot * (gate_sorted * keep)[..., None].astype(y_buf.dtype)
+    y = jnp.zeros((b, s, d), x.dtype)
+    y = y.at[jnp.arange(b)[:, None], tok_sorted].add(y_slot)
+    return y, aux
+
+
+def moe_ffn_sharded(x: jax.Array, params: dict, cfg: ModelConfig
+                    ) -> tuple[jax.Array, jax.Array]:
+    """SPMD-safe MoE: the sorted-capacity dispatch runs inside shard_map
+    so sorts/gathers/scatters stay device-local (GSPMD otherwise lifts the
+    data-dependent scatter to a full batch all-gather — measured 14x FLOP
+    replication on mixtral train_4k, see EXPERIMENTS.md §Dry-run).
+
+    Batch stays sharded over (pod, data); expert weights are sharded on
+    d_ff over `model`; the w_down contraction finishes with a psum over
+    `model` — the same collective a dense row-parallel MLP needs.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty or "model" not in mesh.axis_names:
+        return moe_ffn(x, params, cfg)
+    b = x.shape[0]
+    f = cfg.d_ff
+    bax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    axsz = 1
+    for a in bax:
+        axsz *= mesh.shape[a]
+    if not bax or b % axsz:
+        bax = ()
+    f_ok = f % mesh.shape["model"] == 0
+    f_ax = "model" if f_ok else None
+    P = jax.sharding.PartitionSpec
+    bspec = P(bax if bax else None, None, None)
+
+    def local_fn(x_l, router, wg, wu, wd):
+        y, aux = moe_ffn(x_l, {"router": router, "w_gate": wg, "w_up": wu,
+                               "w_down": wd}, cfg)
+        if f_ax:
+            y = jax.lax.psum(y, f_ax)
+        if bax:
+            aux = jax.lax.pmean(aux, bax)
+        return y, aux
+
+    y, aux = jax.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(bspec, P(None, None), P(None, None, f_ax),
+                  P(None, None, f_ax), P(None, f_ax, None)),
+        out_specs=(bspec, P()),
+        check_vma=False,
+    )(x, params["router"], params["w_gate"], params["w_up"],
+      params["w_down"])
+    return y, aux
+
+
+def moe_ffn_dense_reference(x: jax.Array, params: dict, cfg: ModelConfig
+                            ) -> tuple[jax.Array, jax.Array]:
+    """Oracle: compute EVERY expert densely and combine by gates (no
+    capacity drops). Used by tests; O(E/k) more FLOPs than moe_ffn."""
+    e, k = cfg.num_experts, cfg.experts_per_token
+    probs = router_probs(x, params["router"])
+    gate, expert_idx = jax.lax.top_k(probs, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    aux = load_balance_loss(probs, expert_idx, e)
+    # (B,S,E) combine weights (zero for non-selected experts)
+    combine = jnp.zeros_like(probs)
+    combine = jnp.take_along_axis(
+        combine, expert_idx, axis=-1)  # dummy to keep shapes obvious
+    combine = jnp.sum(jax.nn.one_hot(expert_idx, e) * gate[..., None], axis=2)
+    g = jnp.einsum("bsd,edf->bsef", x, params["w_gate"])
+    u = jnp.einsum("bsd,edf->bsef", x, params["w_up"])
+    y_all = jnp.einsum("bsef,efd->bsed", jax.nn.silu(g) * u, params["w_down"])
+    y = jnp.einsum("bsed,bse->bsd", y_all, combine.astype(x.dtype))
+    return y, aux

@@ -1,0 +1,1 @@
+"""Serving engine (continuous batching + aging-aware host CPU)."""

@@ -1,0 +1,246 @@
+"""Splitwise-style LLM inference cluster model (paper §5, §6.1).
+
+Topology matches the paper's experimental cluster: 22 GPU machines run a
+phase-splitting deployment with 5 *prompt* instances and 17 *token*
+instances (iso-throughput power-optimized design from Splitwise [26]).
+Every serving step lands a Table-2 CPU task on the host CPU of the machine
+executing it; each machine's CPU is governed by a `CoreManager` (proposed
+technique or a baseline policy).
+
+GPU execution times use a linear H100 performance model (prefill cost per
+input token; ORCA-style iteration-level batched decode), and the KV-cache
+transfer between prompt and token machines crosses an InfiniBand link and
+fires `flow_completion` on the receiving host — the same structure
+splitwise-sim models.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import CoreManager, Policy
+from repro.sim.events import EventQueue
+from repro.sim.tasks import CPUTask
+from repro.sim.trace import Request
+
+# ----------------------------- GPU model ------------------------------ #
+PREFILL_BASE_S = 0.030          # fixed prefill overhead (H100, 70B-class)
+PREFILL_PER_TOKEN_S = 1.2e-4    # prefill seconds per input token
+DECODE_ITER_BASE_S = 0.025      # one batched decode forward pass
+DECODE_ITER_PER_REQ_S = 4.0e-4  # marginal batch cost per active request
+MAX_DECODE_BATCH = 64
+KV_BYTES_PER_TOKEN = 320e3      # 70B-class fp16 KV per token (all layers)
+IB_LINK_BW_BPS = 25e9           # 200 Gb/s InfiniBand
+OVERSUB_SLOWDOWN = 2.0          # time-sharing penalty for oversubscribed tasks
+
+
+@dataclasses.dataclass
+class RequestState:
+    req: Request
+    remaining: int
+    t_arrival: float
+    t_first_token: float = -1.0
+    t_done: float = -1.0
+
+
+class Machine:
+    """One inference server: host CPU (CoreManager) + a GPU instance."""
+
+    def __init__(self, machine_id: int, num_cores: int, policy: Policy,
+                 queue: EventQueue, seed: int, idling_period_s: float = 1.0):
+        self.machine_id = machine_id
+        self.queue = queue
+        self.manager = CoreManager(
+            num_cores, policy=policy,
+            rng=np.random.default_rng(seed * 1000 + machine_id),
+            idling_period_s=idling_period_s,
+        )
+        self.running_cpu_tasks = 0
+        self.task_count_samples: list[int] = []
+
+    def run_cpu_task(self, name: str, on_done=None) -> None:
+        """Spawn a Table-2 CPU task; completion latency reflects core
+        aging (degraded frequency) and oversubscription time-sharing."""
+        task = CPUTask(name)
+        now = self.queue.now
+        speed = self.manager.assign(task.task_id, now)
+        dur = task.duration_s / max(speed, 1e-6)
+        if self.manager.core_of_task.get(task.task_id) == -1:  # oversubscribed
+            dur *= OVERSUB_SLOWDOWN
+        self.running_cpu_tasks += 1
+
+        def _finish():
+            self.manager.release(task.task_id, self.queue.now)
+            self.running_cpu_tasks -= 1
+            if on_done is not None:
+                on_done()
+
+        self.queue.schedule_in(dur, _finish)
+
+
+class PromptInstance:
+    """Prefill-phase worker: FIFO, one prefill in flight (Splitwise)."""
+
+    def __init__(self, machine: Machine):
+        self.machine = machine
+        self.queue: list[RequestState] = []
+        self.busy = False
+
+    def enqueue(self, rs: RequestState, on_prefill_done) -> None:
+        m = self.machine
+        # Executor.submit -> submit_chain -> Instance.alloc_memory chain.
+        def after_submit():
+            m.run_cpu_task("submit_chain", lambda: m.run_cpu_task(
+                "alloc_memory", lambda: self._admit(rs, on_prefill_done)))
+        m.run_cpu_task("submit", after_submit)
+
+    def _admit(self, rs: RequestState, on_prefill_done) -> None:
+        self.queue.append((rs, on_prefill_done))
+        self._maybe_start()
+
+    def _maybe_start(self) -> None:
+        if self.busy or not self.queue:
+            return
+        self.busy = True
+        rs, cb = self.queue.pop(0)
+        m = self.machine
+        gpu_time = PREFILL_BASE_S + PREFILL_PER_TOKEN_S * rs.req.input_tokens
+
+        def gpu_done():
+            rs.t_first_token = m.queue.now
+            # finish_task + submit_flow kick off the KV-cache transfer.
+            m.run_cpu_task("finish_task")
+            m.run_cpu_task("submit_flow", lambda: cb(rs))
+            self.busy = False
+            self._maybe_start()
+
+        m.run_cpu_task("submit_task", lambda: m.queue.schedule_in(
+            gpu_time, gpu_done))
+
+
+class TokenInstance:
+    """Decode-phase worker with ORCA iteration-level continuous batching."""
+
+    def __init__(self, machine: Machine):
+        self.machine = machine
+        self.active: list[RequestState] = []
+        self.pending: list[RequestState] = []
+        self.iterating = False
+        self.on_request_done = None
+
+    @property
+    def load(self) -> int:
+        return len(self.active) + len(self.pending)
+
+    def receive_kv(self, rs: RequestState) -> None:
+        """KV-cache flow arrived: fire flow_completion + alloc, then join
+        the continuous batch."""
+        m = self.machine
+
+        def joined():
+            self.pending.append(rs)
+            self._maybe_iterate()
+
+        m.run_cpu_task("flow_completion", lambda: m.run_cpu_task(
+            "alloc_memory", joined))
+
+    def _maybe_iterate(self) -> None:
+        if self.iterating:
+            return
+        # admit pending up to batch limit
+        while self.pending and len(self.active) < MAX_DECODE_BATCH:
+            self.active.append(self.pending.pop(0))
+        if not self.active:
+            return
+        self.iterating = True
+        m = self.machine
+        batch = len(self.active)
+        gpu_time = DECODE_ITER_BASE_S + DECODE_ITER_PER_REQ_S * batch
+
+        def iteration_done():
+            done_now = []
+            for rs in self.active:
+                rs.remaining -= 1
+                if rs.remaining <= 0:
+                    done_now.append(rs)
+            for rs in done_now:
+                self.active.remove(rs)
+                rs.t_done = m.queue.now
+                m.run_cpu_task("free_memory")
+                m.run_cpu_task("finish_request", (
+                    (lambda r=rs: self.on_request_done(r))
+                    if self.on_request_done else None))
+            self.iterating = False
+            self._maybe_iterate()
+
+        # ORCAInstance.start_iteration on the host, then the GPU pass.
+        m.run_cpu_task("start_iteration", lambda: m.queue.schedule_in(
+            gpu_time, iteration_done))
+
+
+class Cluster:
+    """22-machine phase-splitting cluster + cluster-level scheduler."""
+
+    def __init__(self, policy: Policy, num_cores: int, seed: int = 0,
+                 n_prompt: int = 5, n_token: int = 17,
+                 idling_period_s: float = 1.0):
+        self.queue = EventQueue()
+        n_machines = n_prompt + n_token
+        self.machines = [
+            Machine(i, num_cores, policy, self.queue, seed, idling_period_s)
+            for i in range(n_machines)
+        ]
+        self.prompt_instances = [PromptInstance(m)
+                                 for m in self.machines[:n_prompt]]
+        self.token_instances = [TokenInstance(m)
+                                for m in self.machines[n_prompt:]]
+        self.completed: list[RequestState] = []
+        for ti in self.token_instances:
+            ti.on_request_done = self._request_done
+
+    # ----------------------- scheduling policy ------------------------ #
+    def submit_request(self, req: Request) -> None:
+        rs = RequestState(req, remaining=req.output_tokens,
+                          t_arrival=self.queue.now)
+        # JSQ over prompt instances.
+        pi = min(self.prompt_instances, key=lambda p: len(p.queue) + p.busy)
+        pi.enqueue(rs, self._prefill_done)
+
+    def _prefill_done(self, rs: RequestState) -> None:
+        # KV-cache flow to the least-loaded token instance over IB.
+        ti = min(self.token_instances, key=lambda t: t.load)
+        flow_s = rs.req.input_tokens * KV_BYTES_PER_TOKEN / IB_LINK_BW_BPS
+        self.queue.schedule_in(flow_s, lambda: ti.receive_kv(rs))
+
+    def _request_done(self, rs: RequestState) -> None:
+        self.completed.append(rs)
+
+    # --------------------------- main loop ----------------------------- #
+    def run(self, requests: list[Request], duration_s: float,
+            sample_period_s: float = 0.1) -> None:
+        for req in requests:
+            self.queue.schedule(req.arrival_s,
+                                lambda r=req: self.submit_request(r))
+
+        period = self.machines[0].manager.idling_period_s
+
+        def periodic(t=[0.0]):
+            for m in self.machines:
+                m.manager.periodic(self.queue.now)
+            t[0] += period
+            if t[0] <= duration_s:
+                self.queue.schedule_in(period, periodic)
+
+        def sampler(t=[0.0]):
+            for m in self.machines:
+                m.task_count_samples.append(m.running_cpu_tasks)
+            t[0] += sample_period_s
+            if t[0] <= duration_s:
+                self.queue.schedule_in(sample_period_s, sampler)
+
+        self.queue.schedule(period, periodic)
+        self.queue.schedule(sample_period_s, sampler)
+        self.queue.run_until(duration_s)
+        for m in self.machines:
+            m.manager.settle_all(duration_s)

@@ -1,0 +1,34 @@
+"""Minimal deterministic event-driven simulation core (splitwise-sim style)."""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Callable
+
+
+class EventQueue:
+    """Time-ordered callback queue. Ties break by insertion order, so the
+    simulation is fully deterministic given a seed."""
+
+    def __init__(self):
+        self._heap: list = []
+        self._counter = itertools.count()
+        self.now = 0.0
+
+    def schedule(self, time: float, fn: Callable[[], None]) -> None:
+        if time < self.now - 1e-12:
+            time = self.now  # never schedule into the past
+        heapq.heappush(self._heap, (time, next(self._counter), fn))
+
+    def schedule_in(self, delay: float, fn: Callable[[], None]) -> None:
+        self.schedule(self.now + max(delay, 0.0), fn)
+
+    def run_until(self, t_end: float) -> None:
+        while self._heap and self._heap[0][0] <= t_end:
+            time, _, fn = heapq.heappop(self._heap)
+            self.now = time
+            fn()
+        self.now = max(self.now, t_end)
+
+    def __len__(self) -> int:
+        return len(self._heap)

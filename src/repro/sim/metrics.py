@@ -1,0 +1,89 @@
+"""Cluster-level metric aggregation (paper §6.1.3)."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import carbon
+from repro.sim.cluster import Cluster
+
+PERCENTILES = (1, 25, 50, 75, 90, 99)
+
+
+@dataclasses.dataclass
+class ExperimentMetrics:
+    policy: str
+    num_cores: int
+    rate_rps: float
+    # paper Fig. 6: CV of per-server core-frequency distribution, and mean
+    # frequency degradation, percentiled across the cluster's machines.
+    freq_cv_percentiles: dict
+    mean_degradation_percentiles: dict
+    # paper Fig. 8: normalized idle cores distribution (negative = oversub)
+    idle_norm_percentiles: dict
+    oversub_frac_below: float      # fraction of samples below -0.1
+    # paper Fig. 2: concurrent CPU tasks per machine
+    task_count_mean: float
+    task_count_max: int
+    # service quality
+    mean_latency_s: float
+    p99_latency_s: float
+    completed: int
+    # raw per-machine values for downstream carbon estimates
+    per_machine_cv: np.ndarray = None
+    per_machine_degradation: np.ndarray = None
+    per_machine_idle_norm: list = None
+    per_machine_task_samples: list = None
+
+
+def collect(cluster: Cluster, policy: str, num_cores: int,
+            rate_rps: float) -> ExperimentMetrics:
+    cvs, degs, idle_all = [], [], []
+    task_samples = []
+    for m in cluster.machines:
+        snap = m.manager.snapshot()
+        cvs.append(snap["cv"])
+        degs.append(snap["mean_degradation"])
+        idle_all.extend(m.manager.metrics.idle_norm_samples)
+        task_samples.append(np.asarray(m.task_count_samples))
+    cvs = np.asarray(cvs)
+    degs = np.asarray(degs)
+    idle_all = np.asarray(idle_all) if idle_all else np.zeros(1)
+    lat = np.asarray([
+        rs.t_done - rs.t_arrival for rs in cluster.completed
+    ]) if cluster.completed else np.zeros(1)
+    all_tasks = np.concatenate(task_samples) if task_samples else np.zeros(1)
+
+    def pct(x):
+        return {p: float(np.percentile(x, p)) for p in PERCENTILES}
+
+    return ExperimentMetrics(
+        policy=policy,
+        num_cores=num_cores,
+        rate_rps=rate_rps,
+        freq_cv_percentiles=pct(cvs),
+        mean_degradation_percentiles=pct(degs),
+        idle_norm_percentiles=pct(idle_all),
+        oversub_frac_below=float((idle_all < -0.1).mean()),
+        task_count_mean=float(all_tasks.mean()),
+        task_count_max=int(all_tasks.max()),
+        mean_latency_s=float(lat.mean()),
+        p99_latency_s=float(np.percentile(lat, 99)),
+        completed=len(cluster.completed),
+        per_machine_cv=cvs,
+        per_machine_degradation=degs,
+        per_machine_idle_norm=[np.asarray(m.manager.metrics.idle_norm_samples)
+                               for m in cluster.machines],
+        per_machine_task_samples=task_samples,
+    )
+
+
+def carbon_comparison(linux_metrics: ExperimentMetrics,
+                      technique_metrics: ExperimentMetrics,
+                      percentile: int = 99) -> carbon.CarbonEstimate:
+    """Fig. 7: estimate yearly embodied carbon from the p-th percentile of
+    mean-frequency-degradation performance (paper uses p99 and p50)."""
+    deg_linux = linux_metrics.mean_degradation_percentiles[percentile]
+    deg_tech = technique_metrics.mean_degradation_percentiles[percentile]
+    return carbon.estimate(deg_linux, deg_tech)

@@ -1,0 +1,41 @@
+"""Experiment runner: replay a trace against a cluster under a policy."""
+from __future__ import annotations
+
+from repro.core import Policy
+from repro.sim import metrics as metrics_mod
+from repro.sim.cluster import Cluster
+from repro.sim.tasks import reset_task_ids
+from repro.sim.trace import TraceConfig, generate
+
+
+def run_experiment(
+    policy: Policy,
+    num_cores: int = 40,
+    rate_rps: float = 60.0,
+    duration_s: float = 120.0,
+    seed: int = 0,
+    n_prompt: int = 5,
+    n_token: int = 17,
+    idling_period_s: float = 1.0,
+) -> metrics_mod.ExperimentMetrics:
+    reset_task_ids()
+    trace = generate(TraceConfig(rate_rps=rate_rps, duration_s=duration_s,
+                                 seed=seed))
+    cluster = Cluster(policy, num_cores, seed=seed, n_prompt=n_prompt,
+                      n_token=n_token, idling_period_s=idling_period_s)
+    cluster.run(trace, duration_s)
+    return metrics_mod.collect(cluster, policy.value, num_cores, rate_rps)
+
+
+def run_policy_sweep(
+    num_cores: int = 40,
+    rate_rps: float = 60.0,
+    duration_s: float = 120.0,
+    seed: int = 0,
+    policies=(Policy.LINUX, Policy.LEAST_AGED, Policy.PROPOSED),
+) -> dict[str, metrics_mod.ExperimentMetrics]:
+    return {
+        p.value: run_experiment(p, num_cores=num_cores, rate_rps=rate_rps,
+                                duration_s=duration_s, seed=seed)
+        for p in policies
+    }

@@ -1,0 +1,111 @@
+"""Unit + property tests for the NBTI aging model (paper §3.2)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aging
+from repro.core.aging import DEFAULT_PARAMS, TEN_YEARS_S
+
+
+class TestCalibration:
+    def test_k_positive(self):
+        assert DEFAULT_PARAMS.K > 0
+
+    def test_ten_year_worst_case_is_30pct(self):
+        """K is solved so 10y @ 54C, Y=1 costs exactly 30% frequency."""
+        dvth = aging.dvth_after(DEFAULT_PARAMS, 54.0, 1.0, TEN_YEARS_S)
+        f = aging.frequency_scalar(DEFAULT_PARAMS, 1.0, dvth)
+        assert f == pytest.approx(0.70, abs=1e-9)
+
+    def test_cooler_core_ages_slower(self):
+        hot = aging.dvth_after(DEFAULT_PARAMS, 54.0, 1.0, 1e6)
+        cool = aging.dvth_after(DEFAULT_PARAMS, 48.0, 1.0, 1e6)
+        assert cool < hot
+
+    def test_deep_idle_halts_aging(self):
+        dvth0 = 0.01
+        out = aging.dvth_after(DEFAULT_PARAMS, 48.0, 0.0, 1e7, dvth0)
+        assert out == dvth0
+
+
+class TestRecursion:
+    def test_composition_equals_single_interval(self):
+        """Splitting a constant-regime interval must not change the result
+        (the recursion is exactly the closed form dVth = ADF * t^n)."""
+        a = float(aging.adf(DEFAULT_PARAMS, 54.0, 1.0))
+        one = aging.advance_dvth_scalar(DEFAULT_PARAMS, 0.0, a, 1000.0)
+        split = aging.advance_dvth_scalar(DEFAULT_PARAMS, 0.0, a, 400.0)
+        split = aging.advance_dvth_scalar(DEFAULT_PARAMS, split, a, 600.0)
+        assert split == pytest.approx(one, rel=1e-12)
+
+    def test_closed_form(self):
+        a = float(aging.adf(DEFAULT_PARAMS, 51.08, 1.0))
+        t = 12345.0
+        got = aging.advance_dvth_scalar(DEFAULT_PARAMS, 0.0, a, t)
+        assert got == pytest.approx(a * t ** DEFAULT_PARAMS.n, rel=1e-12)
+
+    def test_vector_matches_scalar(self):
+        rng = np.random.default_rng(0)
+        dvth = rng.uniform(0, 0.05, 64)
+        temps = rng.choice([48.0, 51.08, 54.0], 64)
+        stress = rng.choice([0.0, 1.0], 64)
+        tau = rng.uniform(0, 1e5, 64)
+        a = aging.adf(DEFAULT_PARAMS, temps, stress)
+        vec = aging.advance_dvth(DEFAULT_PARAMS, dvth, a, tau)
+        for i in range(64):
+            sc = aging.advance_dvth_scalar(DEFAULT_PARAMS, float(dvth[i]),
+                                           float(a[i]), float(tau[i]))
+            assert vec[i] == pytest.approx(sc, rel=1e-12)
+
+
+class TestProperties:
+    @given(
+        dvth=st.floats(0.0, 0.1),
+        tau=st.floats(0.0, 1e8),
+        temp=st.sampled_from([48.0, 51.08, 54.0]),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_monotone_nondecreasing(self, dvth, tau, temp):
+        """Aging never reverses (no recovery modeled, like the paper)."""
+        a = float(aging.adf(DEFAULT_PARAMS, temp, 1.0))
+        out = aging.advance_dvth_scalar(DEFAULT_PARAMS, dvth, a, tau)
+        assert out >= dvth - 1e-15
+
+    @given(
+        dvth=st.floats(0.0, 0.05),
+        t1=st.floats(1.0, 1e6),
+        t2=st.floats(1.0, 1e6),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_interval_additivity(self, dvth, t1, t2):
+        """advance(t1) ∘ advance(t2) == advance(t1 + t2) at constant ADF —
+        the core invariant that makes lazy settlement correct."""
+        a = float(aging.adf(DEFAULT_PARAMS, 54.0, 1.0))
+        seq = aging.advance_dvth_scalar(DEFAULT_PARAMS, dvth, a, t1)
+        seq = aging.advance_dvth_scalar(DEFAULT_PARAMS, seq, a, t2)
+        direct = aging.advance_dvth_scalar(DEFAULT_PARAMS, dvth, a, t1 + t2)
+        assert seq == pytest.approx(direct, rel=1e-9)
+
+    @given(tau=st.floats(1.0, 1e8))
+    @settings(max_examples=100, deadline=None)
+    def test_frequency_bounded(self, tau):
+        dvth = aging.dvth_after(DEFAULT_PARAMS, 54.0, 1.0, tau)
+        f = aging.frequency_scalar(DEFAULT_PARAMS, 1.0, dvth)
+        assert 0.0 < f <= 1.0
+
+    @given(temp=st.floats(40.0, 80.0))
+    @settings(max_examples=100, deadline=None)
+    def test_adf_increases_with_temperature(self, temp):
+        a1 = float(aging.adf(DEFAULT_PARAMS, temp, 1.0))
+        a2 = float(aging.adf(DEFAULT_PARAMS, temp + 5.0, 1.0))
+        assert a2 > a1
+
+
+class TestSublinearity:
+    def test_front_loaded_aging(self):
+        """t^(1/6): the first year costs more than any later year."""
+        y1 = aging.dvth_after(DEFAULT_PARAMS, 54.0, 1.0, aging.SECONDS_PER_YEAR)
+        y2 = aging.dvth_after(DEFAULT_PARAMS, 54.0, 1.0, 2 * aging.SECONDS_PER_YEAR)
+        assert y1 > (y2 - y1)

@@ -1,0 +1,211 @@
+"""Tests for Algorithm 1 (Task-to-Core Mapping), Algorithm 2 (Selective
+Core Idling), the reaction function, process variation, and carbon model."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import carbon, idling, mapping, variation
+from repro.core.idling import reaction_function
+
+
+class TestReactionFunction:
+    def test_zero(self):
+        assert reaction_function(0.0) == 0.0
+
+    def test_asymmetry_fast_oversub_slow_underutil(self):
+        """Paper: react slower to underutilization, faster to oversub."""
+        for e in (0.1, 0.3, 0.5):
+            assert abs(reaction_function(-e)) > abs(reaction_function(e))
+
+    def test_bounded(self):
+        assert reaction_function(1.0) == pytest.approx(math.tan(0.785), rel=1e-9)
+        assert reaction_function(-1.0) == pytest.approx(math.atan(-1.55), rel=1e-9)
+        assert abs(reaction_function(1.0)) <= 1.0 + 1e-6
+        assert abs(reaction_function(-1.0)) <= 1.0
+
+    @given(e=st.floats(-1.0, 1.0))
+    @settings(max_examples=200, deadline=None)
+    def test_sign_preserving_monotone(self, e):
+        f = reaction_function(e)
+        assert math.copysign(1, f) == math.copysign(1, e) or f == 0.0
+        assert reaction_function(min(e + 0.01, 1.0)) >= f - 1e-12
+
+
+class TestCoreCorrection:
+    def test_all_idle_cores_spare(self):
+        # 32 cores, all active, 0 tasks -> strong positive correction.
+        c = idling.core_correction(32, 32, 0, 0)
+        assert c == int(32 * math.tan(0.785))
+
+    def test_balanced(self):
+        assert idling.core_correction(32, 16, 16, 0) == 0
+
+    def test_oversubscription_wakes_cores(self):
+        # 8 active of 32, 16 tasks running/waiting -> negative correction.
+        c = idling.core_correction(32, 8, 8, 8)
+        assert c < 0
+
+    def test_task_cap_at_total(self):
+        c = idling.core_correction(16, 16, 16, 1000)
+        assert c == 0  # tasks capped at N, e = 0
+
+    @given(n=st.integers(2, 128), active=st.integers(0, 128),
+           tasks=st.integers(0, 256), oversub=st.integers(0, 64))
+    @settings(max_examples=300, deadline=None)
+    def test_correction_bounds(self, n, active, tasks, oversub):
+        active = min(active, n)
+        tasks = min(tasks, active)
+        c = idling.core_correction(n, active, tasks, oversub)
+        assert -n <= c <= n
+
+
+class TestApplyCorrection:
+    def _state(self, n=16, n_active=12, n_tasks=4, seed=0):
+        rng = np.random.default_rng(seed)
+        active = np.zeros(n, bool)
+        active[:n_active] = True
+        tasks = np.zeros(n, bool)
+        tasks[rng.choice(n_active, n_tasks, replace=False)] = True
+        age = rng.uniform(0, 1, n)
+        return active, tasks, age
+
+    def test_never_idles_busy_core(self):
+        active, tasks, age = self._state()
+        to_idle, _ = idling.apply_correction(8, active, tasks, age)
+        assert not tasks[to_idle].any()
+        assert active[to_idle].all()
+
+    def test_idles_most_aged_first(self):
+        active, tasks, age = self._state()
+        to_idle, _ = idling.apply_correction(3, active, tasks, age)
+        cand = np.flatnonzero(active & ~tasks)
+        expect = cand[np.argsort(-age[cand])][:3]
+        np.testing.assert_array_equal(to_idle, expect)
+
+    def test_wakes_least_aged_first(self):
+        active, tasks, age = self._state()
+        _, to_wake = idling.apply_correction(-2, active, tasks, age)
+        cand = np.flatnonzero(~active)
+        expect = cand[np.argsort(age[cand])][:2]
+        np.testing.assert_array_equal(to_wake, expect)
+
+    def test_correction_capped_by_candidates(self):
+        active, tasks, age = self._state(n=8, n_active=8, n_tasks=6)
+        to_idle, _ = idling.apply_correction(5, active, tasks, age)
+        assert len(to_idle) == 2  # only 2 unassigned active cores exist
+
+
+class TestMapping:
+    def test_selects_max_idle_score(self):
+        hist = np.zeros((4, mapping.IDLE_HISTORY_LEN))
+        hist[2, :] = 5.0
+        hist[1, :] = 1.0
+        active = np.ones(4, bool)
+        tasks = np.zeros(4, bool)
+        assert mapping.select_core(active, tasks, hist) == 2
+
+    def test_skips_assigned_and_idle(self):
+        hist = np.zeros((4, mapping.IDLE_HISTORY_LEN))
+        hist[2, :] = 5.0
+        hist[3, :] = 4.0
+        active = np.array([True, True, True, False])
+        tasks = np.array([False, False, True, False])
+        # core 2 busy, core 3 deep-idle -> best remaining is 0 or 1 (ties -> 0)
+        assert mapping.select_core(active, tasks, hist) in (0, 1)
+
+    def test_returns_minus_one_when_full(self):
+        hist = np.zeros((2, mapping.IDLE_HISTORY_LEN))
+        assert mapping.select_core(np.ones(2, bool), np.ones(2, bool), hist) == -1
+
+    def test_ring_buffer(self):
+        hist = np.zeros((1, mapping.IDLE_HISTORY_LEN))
+        pos = np.zeros(1, np.int64)
+        for k in range(12):
+            mapping.record_idle_end(hist, pos, 0, float(k))
+        # last 8 entries survive: 4..11
+        assert set(hist[0]) == set(float(k) for k in range(4, 12))
+
+    @given(n=st.integers(1, 64), seed=st.integers(0, 1000))
+    @settings(max_examples=100, deadline=None)
+    def test_selected_core_is_valid(self, n, seed):
+        rng = np.random.default_rng(seed)
+        active = rng.random(n) < 0.7
+        tasks = (rng.random(n) < 0.4) & active
+        hist = rng.uniform(0, 10, (n, mapping.IDLE_HISTORY_LEN))
+        core = mapping.select_core(active, tasks, hist)
+        if core == -1:
+            assert not (active & ~tasks).any()
+        else:
+            assert active[core] and not tasks[core]
+            cand = active & ~tasks
+            assert hist[core].sum() == pytest.approx(
+                hist[cand].sum(axis=1).max())
+
+
+class TestVariation:
+    def test_no_variation_gives_nominal(self):
+        p = variation.VariationParams(sigma_frac=0.0)
+        f0 = variation.sample_initial_frequencies(
+            p, 16, np.random.default_rng(0))
+        np.testing.assert_allclose(f0, p.f_nominal, rtol=1e-9)
+
+    def test_deterministic_given_seed(self):
+        p = variation.VariationParams()
+        a = variation.sample_initial_frequencies(p, 40, np.random.default_rng(7))
+        b = variation.sample_initial_frequencies(p, 40, np.random.default_rng(7))
+        np.testing.assert_array_equal(a, b)
+
+    def test_spread_reasonable(self):
+        p = variation.VariationParams()
+        rng = np.random.default_rng(3)
+        f0 = np.concatenate([
+            variation.sample_initial_frequencies(p, 80, rng) for _ in range(20)
+        ])
+        assert 0.6 < f0.min() and f0.max() < 1.6
+        assert 0.005 < f0.std() < 0.2
+
+    def test_partition_covers_all_cores(self):
+        parts = variation.core_cell_partition(10, 40)
+        assert len(parts) == 40
+        assert all(len(c) >= 1 for c in parts)
+        assert sorted(np.concatenate(parts)) == list(range(100))
+
+    def test_partition_more_cores_than_cells(self):
+        parts = variation.core_cell_partition(4, 40)
+        assert len(parts) == 40
+
+    def test_correlation_decay(self):
+        """Nearby cells correlate more than distant cells."""
+        p = variation.VariationParams()
+        rng = np.random.default_rng(11)
+        grids = np.stack([variation.sample_grid(p, rng) for _ in range(4000)])
+        near = np.corrcoef(grids[:, 0, 0], grids[:, 0, 1])[0, 1]
+        far = np.corrcoef(grids[:, 0, 0], grids[:, 9, 9])[0, 1]
+        assert near > far
+        assert near == pytest.approx(math.exp(-p.alpha), abs=0.1)
+
+
+class TestCarbon:
+    def test_no_improvement_no_saving(self):
+        e = carbon.estimate(0.01, 0.01)
+        assert e.reduction_frac == pytest.approx(0.0)
+        assert e.extended_life_years == pytest.approx(3.0)
+
+    def test_paper_headline_mapping(self):
+        """37.67% yearly reduction corresponds to extension 1/(1-0.3767)."""
+        ext = 1.0 / (1.0 - 0.3767)
+        e = carbon.estimate(ext * 0.01, 0.01)
+        assert e.reduction_frac == pytest.approx(0.3767, abs=1e-6)
+
+    def test_halted_aging_capped(self):
+        e = carbon.estimate(0.01, 0.0)
+        assert e.extension_factor == 100.0
+
+    @given(dl=st.floats(1e-6, 1.0), dt=st.floats(1e-6, 1.0))
+    @settings(max_examples=200, deadline=None)
+    def test_reduction_bounded(self, dl, dt):
+        e = carbon.estimate(dl, dt)
+        assert e.reduction_frac < 1.0
+        assert e.yearly_kgco2eq > 0

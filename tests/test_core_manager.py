@@ -1,0 +1,208 @@
+"""Integration tests for the CoreManager runtime (all three policies)."""
+import numpy as np
+import pytest
+
+from repro.core import CoreManager, Policy
+from repro.core.temperature import CState
+
+
+def make(policy=Policy.PROPOSED, n=16, seed=0, **kw):
+    return CoreManager(n, policy=policy, rng=np.random.default_rng(seed), **kw)
+
+
+class TestLifecycle:
+    def test_assign_release_roundtrip(self):
+        m = make()
+        speed = m.assign(1, 0.0)
+        assert 0.5 < speed <= 1.6
+        core = m.core_of_task[1]
+        assert m.task_of_core[core] == 1
+        m.release(1, 2.0)
+        assert m.task_of_core[core] == -1
+        assert 1 not in m.core_of_task
+
+    def test_oversubscription_when_saturated(self):
+        m = make(n=4)
+        for t in range(6):
+            m.assign(t, 0.0)
+        assert len(m.oversub_tasks) == 2
+        assert m.metrics.oversub_assigns == 2
+        # releasing a core promotes a waiting task
+        m.release(0, 1.0)
+        assert len(m.oversub_tasks) == 1
+
+    def test_all_policies_roundtrip(self):
+        for pol in Policy:
+            m = make(pol, n=8)
+            for t in range(20):
+                m.assign(t, float(t))
+                m.release(t, float(t) + 0.5)
+            assert m.task_of_core.max() == -1
+            assert not m.oversub_tasks
+
+
+class TestAgingAccounting:
+    def test_busy_core_ages_more(self):
+        m = make(n=4)
+        m.assign(0, 0.0)
+        core = m.core_of_task[0]
+        m.release(0, 3600.0)
+        m.settle_all(3600.0)
+        others = [i for i in range(4) if i != core]
+        assert m.dvth[core] > max(m.dvth[i] for i in others)
+
+    def test_deep_idle_core_frozen(self):
+        m = make(n=8)
+        # no tasks -> periodic will idle most cores
+        m.periodic(1.0)
+        idle = np.flatnonzero(m.c_state == CState.DEEP_IDLE)
+        assert idle.size > 0
+        before = m.dvth[idle].copy()
+        m.settle_all(3600.0)
+        np.testing.assert_array_equal(m.dvth[idle], before)
+        active = np.flatnonzero(m.c_state == CState.ACTIVE)
+        assert (m.dvth[active] > 0).all()
+
+    def test_settlement_order_independent(self):
+        """Settling at intermediate times must not change the result."""
+        m1, m2 = make(seed=1), make(seed=1)
+        m1.assign(0, 0.0); m2.assign(0, 0.0)
+        for t in np.linspace(10, 990, 17):
+            m1.settle_all(float(t))
+        m1.settle_all(1000.0); m2.settle_all(1000.0)
+        np.testing.assert_allclose(m1.dvth, m2.dvth, rtol=1e-9)
+
+    def test_frequencies_start_at_f0(self):
+        m = make()
+        np.testing.assert_allclose(m.frequencies(0.0), m.f0)
+
+
+class TestSelectiveIdling:
+    def test_idles_unused_cores(self):
+        m = make(n=32)
+        m.assign(0, 0.0)
+        for k in range(8):
+            m.periodic(float(k + 1))
+        active = int((m.c_state == CState.ACTIVE).sum())
+        assert active < 32  # working set shrank toward the 1 running task
+
+    def test_wakes_on_burst(self):
+        m = make(n=32, idling_period_s=0.5)
+        for k in range(20):
+            m.periodic(0.5 * (k + 1))  # shrink working set to ~0 tasks
+        shrunk = int((m.c_state == CState.ACTIVE).sum())
+        # burst of tasks
+        t0 = 11.0
+        for t in range(16):
+            m.assign(100 + t, t0)
+        for k in range(20):
+            m.periodic(t0 + 0.5 * (k + 1))
+        grown = int((m.c_state == CState.ACTIVE).sum())
+        assert grown > shrunk
+        assert grown >= 16  # enough cores for the running tasks
+
+    def test_baselines_never_idle(self):
+        for pol in (Policy.LINUX, Policy.LEAST_AGED):
+            m = make(pol, n=16)
+            for k in range(10):
+                m.periodic(float(k + 1))
+            assert (m.c_state == CState.ACTIVE).all()
+
+
+class TestEvenOutBehaviour:
+    def test_proposed_beats_linux_on_cv(self):
+        """Over a bursty synthetic load, the proposed policy should end
+        with lower frequency CV and lower mean degradation than linux —
+        the paper's Fig. 6 orderings at unit scale."""
+        HOUR = 3600.0
+        results = {}
+        for pol in (Policy.PROPOSED, Policy.LINUX):
+            m = make(pol, n=16, seed=42, idling_period_s=10.0)
+            rng = np.random.default_rng(0)
+            t, tid = 0.0, 0
+            while t < 6 * HOUR:
+                k = rng.poisson(2)
+                ids = []
+                for _ in range(k):
+                    m.assign(tid, t); ids.append(tid); tid += 1
+                for i in ids:
+                    m.release(i, t + rng.uniform(1.0, 5.0))
+                t += 10.0
+                m.periodic(t)
+            m.settle_all(6 * HOUR)
+            results[pol] = (m.frequency_cv(), m.mean_frequency_degradation())
+        assert results[Policy.PROPOSED][1] < results[Policy.LINUX][1]
+
+
+class TestMetrics:
+    def test_idle_norm_sampled(self):
+        m = make(n=8)
+        m.assign(0, 0.0)
+        m.periodic(1.0)
+        assert len(m.metrics.idle_norm_samples) == 1
+        v = m.metrics.idle_norm_samples[0]
+        assert -1.0 <= v <= 1.0
+
+    def test_snapshot_keys(self):
+        m = make()
+        snap = m.snapshot()
+        assert set(snap) >= {"f0", "f", "dvth", "active", "cv",
+                             "mean_degradation"}
+
+
+class TestManagerInvariants:
+    """Hypothesis property tests over random task schedules: the
+    CoreManager must preserve its structural invariants under any
+    interleaving of assigns/releases/periodics."""
+
+    def test_random_schedule_invariants(self):
+        from hypothesis import given, settings, strategies as st
+
+        @given(seed=st.integers(0, 10_000),
+               policy=st.sampled_from(list(Policy)))
+        @settings(max_examples=25, deadline=None)
+        def run(seed, policy):
+            rng = np.random.default_rng(seed)
+            m = make(policy, n=8, seed=seed)
+            live = set()
+            t = 0.0
+            tid = 0
+            for _ in range(60):
+                t += float(rng.uniform(0.01, 0.5))
+                act = rng.integers(0, 3)
+                if act == 0:
+                    m.assign(tid, t)
+                    live.add(tid)
+                    tid += 1
+                elif act == 1 and live:
+                    victim = live.pop()
+                    m.release(victim, t)
+                else:
+                    m.periodic(t)
+                # --- invariants ---
+                n_assigned = int((m.task_of_core >= 0).sum())
+                n_oversub = len(m.oversub_tasks)
+                assert n_assigned + n_oversub == len(live)
+                # a core never holds a task while deep idle
+                idle = m.c_state == CState.DEEP_IDLE
+                assert (m.task_of_core[idle] == -1).all()
+                # dvth monotone: frequencies never exceed f0
+                assert (m.frequencies(t) <= m.f0 + 1e-12).all()
+                # core<->task maps are mutually consistent
+                for task, core in m.core_of_task.items():
+                    if core >= 0:
+                        assert m.task_of_core[core] == task
+                # baselines never deep idle
+                if policy is not Policy.PROPOSED:
+                    assert not idle.any()
+
+        run()
+
+    def test_oversub_metric_monotone(self):
+        m = make(n=2)
+        for i in range(5):
+            m.assign(i, 0.0)
+        before = m.metrics.oversub_task_seconds
+        for i in range(5):
+            m.release(i, 1.0)
+        assert m.metrics.oversub_task_seconds >= before

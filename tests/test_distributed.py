@@ -1,0 +1,171 @@
+"""Distribution-layer tests: sharding specs, HLO collective parsing, and
+a subprocess dry-run smoke (512 host devices can't coexist with the
+single-device test process)."""
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed import hlo_analysis
+from repro.distributed import sharding as shd
+from repro.models import Model
+
+
+class FakeMesh:
+    """Duck-typed mesh (shape dict + axis_names) for spec unit tests."""
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH_POD = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+class TestParamSpecs:
+    @pytest.mark.parametrize("arch", ["llama3-8b", "mixtral-8x22b",
+                                      "mamba2-2.7b", "minicpm3-4b",
+                                      "zamba2-7b",
+                                      "seamless-m4t-large-v2"])
+    def test_specs_divide_evenly(self, arch):
+        """Every sharded dim must divide by its mesh axes (JAX requirement
+        at jit boundaries)."""
+        cfg = get_config(arch)
+        model = Model(cfg)
+        abstract = model.abstract_params()
+        specs = shd.param_specs(abstract, MESH)
+
+        def check(a, s):
+            assert len(s) == a.ndim, (a.shape, s)
+            for dim, ax in zip(a.shape, s):
+                if ax is not None:
+                    assert dim % shd.axis_size(MESH, ax) == 0, (a.shape, s)
+        jax.tree.map(check, abstract, specs,
+                     is_leaf=lambda x: isinstance(x, P))
+
+    def test_vocab_sharded(self):
+        cfg = get_config("llama3-8b")
+        specs = shd.param_specs(Model(cfg).abstract_params(), MESH)
+        assert specs["embed"] == P("model", None)
+        assert specs["unembed"] == P("model", None)
+
+    def test_layer_stacking_stripped(self):
+        cfg = get_config("llama3-8b")
+        specs = shd.param_specs(Model(cfg).abstract_params(), MESH)
+        # stacked (L, D, H*hd) column-parallel: leading None then rule
+        assert specs["layers"]["attn"]["wq"] == P(None, None, "model")
+        assert specs["layers"]["attn"]["wo"] == P(None, "model", None)
+
+    def test_moe_expert_weights_sharded_on_ff(self):
+        cfg = get_config("mixtral-8x22b")
+        specs = shd.param_specs(Model(cfg).abstract_params(), MESH)
+        assert specs["layers"]["mlp"]["w_gate"] == P(None, None, None,
+                                                     "model")
+        assert specs["layers"]["mlp"]["w_down"] == P(None, None, "model",
+                                                     None)
+
+
+class TestCacheSpecs:
+    def test_kv_cache_heads_or_seq(self):
+        # kv heads 8 < 16 -> seq gets the model axis
+        spec = shd.kv_cache_spec(MESH, (32, 128, 32768, 8, 128))
+        assert spec == P(None, "data", "model", None, None)
+        # kv heads 32 -> heads take the model axis
+        spec = shd.kv_cache_spec(MESH, (32, 128, 32768, 32, 128))
+        assert spec == P(None, "data", None, "model", None)
+
+    def test_batch_one_replicated(self):
+        spec = shd.kv_cache_spec(MESH, (32, 1, 4096, 8, 128))
+        assert spec[1] is None
+
+    def test_hybrid_nested_cache(self):
+        cfg = get_config("zamba2-7b")
+        from repro.models.config import INPUT_SHAPES
+        pass  # (dryrun import not needed here; jax already initialized
+        # single-device in this test process)
+
+        # build abstract cache shapes manually for the nested case:
+        model = Model(cfg)
+        tok = jax.ShapeDtypeStruct((2, 31), jnp.int32)
+        abstract = jax.eval_shape(
+            lambda p, t: model.prefill(p, t, None, max_len=32)[1],
+            model.abstract_params(), tok)
+        specs = shd.cache_specs(cfg, abstract, MESH)
+        # grouped ssm conv cache: (G, per, B, W-1, C)
+        conv_spec = specs["ssm"]["conv"]
+        assert len(conv_spec) == 5
+        assert conv_spec[-1] == "model"  # conv channels divisible
+
+
+class TestHLOAnalysis:
+    def test_collective_parsing(self):
+        hlo = """
+  %all-gather.1 = bf16[4,128]{1,0} all-gather(%x), replica_groups={}
+  %ar = (f32[16,16]{1,0}, f32[8]{0}) all-reduce(%a, %b), to_apply=%add
+  %notacoll = f32[2]{0} add(%c, %d)
+  %rs = f32[64]{0} reduce-scatter(%e), dimensions={0}
+"""
+        out = hlo_analysis.collective_bytes(hlo)
+        assert out["all-gather"] == 4 * 128 * 2
+        assert out["all-reduce"] == 16 * 16 * 4 + 8 * 4
+        assert out["reduce-scatter"] == 64 * 4
+        assert out["total"] == (4 * 128 * 2 + 16 * 16 * 4 + 8 * 4 + 64 * 4)
+        assert out["count"] == 3
+
+    def test_ignores_done_ops(self):
+        hlo = ("  %ag = bf16[8]{0} all-gather-start(%x)\n"
+               "  %agd = bf16[8]{0} all-gather-done(%ag)\n")
+        out = hlo_analysis.collective_bytes(hlo)
+        assert out["count"] == 1
+
+
+@pytest.mark.slow
+class TestDryRunSmoke:
+    """Subprocess dry-run: proves the 512-device multi-pod lowering works
+    end-to-end (one fast config; the full 80-combo sweep is offline)."""
+
+    def test_llama3_decode_both_meshes(self):
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", "llama3-8b", "--shape", "decode_32k",
+               "--mesh", "both"]
+        out = subprocess.run(cmd, capture_output=True, text=True,
+                             timeout=1200,
+                             env={**__import__("os").environ,
+                                  "PYTHONPATH": "src"},
+                             cwd=__import__("os").path.dirname(
+                                 __import__("os").path.dirname(__file__)))
+        assert "ALL DRY-RUNS PASSED" in out.stdout, out.stdout + out.stderr
+        assert "16x16" in out.stdout and "2x16x16" in out.stdout
+
+
+class TestCostExtrapolation:
+    """Unit tests for the reduced-depth cost extrapolation algebra."""
+
+    def test_coll_comb_linear(self):
+        import os
+        jax.devices()  # lock the backend to 1 device BEFORE importing
+        saved = os.environ.get("XLA_FLAGS")
+        from repro.launch import dryrun
+        # dryrun sets XLA_FLAGS at import (required for __main__ use);
+        # undo it so later test processes/subprocesses are unaffected.
+        if saved is None:
+            os.environ.pop("XLA_FLAGS", None)
+        else:
+            os.environ["XLA_FLAGS"] = saved
+        a = {"all-reduce": 10.0, "total": 10.0}
+        b = {"all-reduce": 4.0, "all-gather": 2.0, "total": 6.0}
+        out = dryrun._coll_comb(a, b, 1.0, -1.0)
+        assert out["all-reduce"] == 6.0
+        assert out["all-gather"] == 0.0  # clamped at zero
+
+    def test_linear_extrapolation_exact_for_linear_costs(self):
+        """f(L) = non + L*layer must be recovered exactly from L=2,4."""
+        non, layer, L = 7.0, 3.0, 32
+        c1 = non + 2 * layer
+        c2 = non + 4 * layer
+        steps = (L - 2) / 2
+        assert c1 + (c2 - c1) * steps == non + L * layer

@@ -1,0 +1,120 @@
+"""Simulator tests: event core, traces, cluster behaviour, paper claims."""
+import numpy as np
+import pytest
+
+from repro.core import Policy
+from repro.sim import (EventQueue, TraceConfig, carbon_comparison, generate,
+                       run_experiment, run_policy_sweep, trace_stats)
+
+
+class TestEventQueue:
+    def test_ordering(self):
+        q = EventQueue()
+        seen = []
+        q.schedule(2.0, lambda: seen.append("b"))
+        q.schedule(1.0, lambda: seen.append("a"))
+        q.schedule(1.0, lambda: seen.append("a2"))  # FIFO tie-break
+        q.run_until(3.0)
+        assert seen == ["a", "a2", "b"]
+        assert q.now == 3.0
+
+    def test_schedule_in_during_run(self):
+        q = EventQueue()
+        seen = []
+
+        def chain(k):
+            seen.append(k)
+            if k < 3:
+                q.schedule_in(0.5, lambda: chain(k + 1))
+
+        q.schedule(0.0, lambda: chain(0))
+        q.run_until(10.0)
+        assert seen == [0, 1, 2, 3]
+
+    def test_no_past_scheduling(self):
+        q = EventQueue()
+        q.run_until(5.0)
+        seen = []
+        q.schedule(1.0, lambda: seen.append(1))  # clamped to now
+        q.run_until(6.0)
+        assert seen == [1]
+
+
+class TestTrace:
+    def test_deterministic(self):
+        a = generate(TraceConfig(seed=3, duration_s=20))
+        b = generate(TraceConfig(seed=3, duration_s=20))
+        assert a == b
+
+    def test_statistics_match_azure_characterization(self):
+        """Synthesized traces must match the Splitwise Azure-conversation
+        characterization: input median ~1020, output mean ~211 tokens."""
+        stats = trace_stats(generate(TraceConfig(rate_rps=200, duration_s=120,
+                                                 seed=0)))
+        assert 800 < stats["input_median"] < 1300
+        assert 150 < stats["output_mean"] < 300
+
+    def test_rate_respected(self):
+        reqs = generate(TraceConfig(rate_rps=50, duration_s=100, seed=1))
+        assert len(reqs) == pytest.approx(5000, rel=0.1)
+        assert all(0 <= r.arrival_s < 100 for r in reqs)
+
+
+class TestClusterEndToEnd:
+    @pytest.fixture(scope="class")
+    def sweep(self):
+        return run_policy_sweep(num_cores=40, rate_rps=60, duration_s=30,
+                                seed=0)
+
+    def test_requests_complete(self, sweep):
+        for m in sweep.values():
+            assert m.completed > 100
+
+    def test_cpu_underutilization_observed(self, sweep):
+        """Paper O1/O2 (Fig. 2): low mean concurrent tasks, with bursts."""
+        linux = sweep["linux"]
+        assert linux.task_count_mean < 5.0       # far below 40 cores
+        assert linux.task_count_max >= 2          # bursts exist
+
+    def test_baselines_never_oversubscribe(self, sweep):
+        for name in ("linux", "least-aged"):
+            assert sweep[name].oversub_frac_below == 0.0
+            # all-active, few tasks -> normalized idle stays near 1.0
+            assert sweep[name].idle_norm_percentiles[90] > 0.8
+
+    def test_proposed_cuts_underutilization(self, sweep):
+        """Paper Fig. 8: >=77% reduction of p90 normalized idle cores."""
+        base = sweep["linux"].idle_norm_percentiles[90]
+        ours = sweep["proposed"].idle_norm_percentiles[90]
+        assert ours < base * (1 - 0.77)
+
+    def test_proposed_oversubscription_below_10pct(self, sweep):
+        """Paper: p1 of normalized idle cores stays above -0.1."""
+        assert sweep["proposed"].idle_norm_percentiles[1] >= -0.1
+
+    def test_proposed_reduces_mean_degradation(self, sweep):
+        """Paper Fig. 6: age-halting cuts mean frequency degradation."""
+        for p in (50, 99):
+            assert (sweep["proposed"].mean_degradation_percentiles[p]
+                    < sweep["linux"].mean_degradation_percentiles[p])
+            assert (sweep["proposed"].mean_degradation_percentiles[p]
+                    < sweep["least-aged"].mean_degradation_percentiles[p])
+
+    def test_carbon_reduction_ballpark(self, sweep):
+        """Paper Fig. 7: 37.67% @ p99 (49.01% @ p50). Accept 25-65% at
+        our shorter horizon — the linear-ratio model is duration-robust
+        but the idling opportunity grows with cluster underutilization."""
+        est = carbon_comparison(sweep["linux"], sweep["proposed"], 99)
+        assert 0.25 < est.reduction_frac < 0.65
+
+    def test_service_quality_impact_bounded(self, sweep):
+        """Paper: <10% impact on inference service quality."""
+        base = sweep["linux"].p99_latency_s
+        ours = sweep["proposed"].p99_latency_s
+        assert ours < base * 1.10
+
+    def test_determinism(self):
+        a = run_experiment(Policy.PROPOSED, rate_rps=40, duration_s=10, seed=5)
+        b = run_experiment(Policy.PROPOSED, rate_rps=40, duration_s=10, seed=5)
+        assert a.freq_cv_percentiles == b.freq_cv_percentiles
+        assert a.completed == b.completed
