@@ -13,9 +13,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import CoreManager, Policy
+from repro.core import CoreManager
 from repro.core import idling, mapping
-from repro.sim import run_experiment
+from repro.sim import ExperimentConfig, run_experiment
 
 from benchmarks.common import emit
 
@@ -45,7 +45,7 @@ def sweep_reaction_gains() -> list[dict]:
                             (0.4, 2.5)]:     # extreme asymmetry
             idling.UNDERUTIL_GAIN, idling.OVERSUB_GAIN = under, over
             mgr = _bursty_load(CoreManager(
-                40, policy=Policy.PROPOSED, rng=np.random.default_rng(0)))
+                40, policy="proposed", rng=np.random.default_rng(0)))
             samples = np.asarray(mgr.metrics.idle_norm_samples)
             rows.append({
                 "ablation": "reaction_gains",
@@ -65,8 +65,9 @@ def sweep_reaction_gains() -> list[dict]:
 def sweep_idling_period() -> list[dict]:
     rows = []
     for period in (0.25, 1.0, 5.0, 30.0):
-        m = run_experiment(Policy.PROPOSED, num_cores=40, rate_rps=60,
-                           duration_s=60, seed=0, idling_period_s=period)
+        m = run_experiment(ExperimentConfig(
+            policy="proposed", num_cores=40, rate_rps=60, duration_s=60,
+            seed=0, idling_period_s=period))
         rows.append({
             "ablation": "idling_period",
             "period_s": period,
@@ -85,7 +86,7 @@ def sweep_history_window() -> list[dict]:
         for win in (2, 8, 32):
             mapping.IDLE_HISTORY_LEN = win
             mgr = _bursty_load(CoreManager(
-                40, policy=Policy.PROPOSED, rng=np.random.default_rng(0)))
+                40, policy="proposed", rng=np.random.default_rng(0)))
             rows.append({
                 "ablation": "idle_history_window",
                 "window": win,

@@ -4,8 +4,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import Policy
-from repro.sim import run_experiment
+from repro.sim import ExperimentConfig, run_experiment
 
 from benchmarks.common import emit
 
@@ -13,8 +12,9 @@ from benchmarks.common import emit
 def run(duration_s: float = 60.0, rates=(40, 60, 80, 100)) -> list[dict]:
     rows = []
     for rate in rates:
-        m = run_experiment(Policy.LINUX, num_cores=40, rate_rps=rate,
-                           duration_s=duration_s, seed=0)
+        m = run_experiment(ExperimentConfig(
+            policy="linux", num_cores=40, rate_rps=rate,
+            duration_s=duration_s, seed=0))
         samples = np.concatenate(m.per_machine_task_samples)
         rows.append({
             "rate_rps": rate,

@@ -5,18 +5,20 @@ value under the technique (higher = better), mirroring the paper's
 normalized performance plots."""
 from __future__ import annotations
 
-from repro.sim import run_policy_sweep
+from repro.sim import DEFAULT_SWEEP, ExperimentConfig, run_policy_sweep
 
 from benchmarks.common import emit
 
 
 def run(duration_s: float = 120.0, rates=(40, 70, 100),
-        core_counts=(40, 80)) -> list[dict]:
+        core_counts=(40, 80), policies=DEFAULT_SWEEP) -> list[dict]:
     rows = []
     for cores in core_counts:
         for rate in rates:
-            res = run_policy_sweep(num_cores=cores, rate_rps=rate,
-                                   duration_s=duration_s, seed=1)
+            res = run_policy_sweep(
+                ExperimentConfig(num_cores=cores, rate_rps=rate,
+                                 duration_s=duration_s, seed=1),
+                policies=policies)
             linux = res["linux"]
             for name, m in res.items():
                 rows.append({

@@ -4,7 +4,7 @@ performance). Paper headline: 37.67% @ p99, 49.01% @ p50."""
 from __future__ import annotations
 
 from repro.core.carbon import CPU_EMBODIED_KGCO2EQ, BASELINE_LIFESPAN_YEARS
-from repro.sim import carbon_comparison, run_policy_sweep
+from repro.sim import ExperimentConfig, carbon_comparison, run_policy_sweep
 
 from benchmarks.common import emit
 
@@ -14,8 +14,8 @@ N_MACHINES = 22
 def run(duration_s: float = 120.0, rates=(40, 70, 100)) -> list[dict]:
     rows = []
     for rate in rates:
-        res = run_policy_sweep(num_cores=40, rate_rps=rate,
-                               duration_s=duration_s, seed=1)
+        res = run_policy_sweep(ExperimentConfig(
+            num_cores=40, rate_rps=rate, duration_s=duration_s, seed=1))
         base_yearly = N_MACHINES * CPU_EMBODIED_KGCO2EQ / BASELINE_LIFESPAN_YEARS
         for tech in ("least-aged", "proposed"):
             for pct in (99, 50):

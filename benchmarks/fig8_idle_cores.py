@@ -4,18 +4,20 @@ oversubscription). Paper: proposed is >=77% better at p90 and keeps
 oversubscription above -0.1 at p1."""
 from __future__ import annotations
 
-from repro.sim import run_policy_sweep
+from repro.sim import DEFAULT_SWEEP, ExperimentConfig, run_policy_sweep
 
 from benchmarks.common import emit
 
 
 def run(duration_s: float = 120.0, rates=(40, 100),
-        core_counts=(40, 80)) -> list[dict]:
+        core_counts=(40, 80), policies=DEFAULT_SWEEP) -> list[dict]:
     rows = []
     for cores in core_counts:
         for rate in rates:
-            res = run_policy_sweep(num_cores=cores, rate_rps=rate,
-                                   duration_s=duration_s, seed=1)
+            res = run_policy_sweep(
+                ExperimentConfig(num_cores=cores, rate_rps=rate,
+                                 duration_s=duration_s, seed=1),
+                policies=policies)
             p90_linux = res["linux"].idle_norm_percentiles[90]
             for name, m in res.items():
                 pct = m.idle_norm_percentiles

@@ -6,7 +6,7 @@
 """
 import argparse
 
-from repro.sim import carbon_comparison, run_policy_sweep
+from repro.sim import ExperimentConfig, carbon_comparison, run_policy_sweep
 
 
 def main() -> None:
@@ -16,8 +16,9 @@ def main() -> None:
     ap.add_argument("--cores", type=int, default=40)
     args = ap.parse_args()
 
-    res = run_policy_sweep(num_cores=args.cores, rate_rps=args.rate,
-                           duration_s=args.duration, seed=1)
+    res = run_policy_sweep(ExperimentConfig(
+        num_cores=args.cores, rate_rps=args.rate,
+        duration_s=args.duration, seed=1))
     linux, proposed = res["linux"], res["proposed"]
 
     print(f"cluster: 22 machines (5 prompt + 17 token), {args.cores}-core "

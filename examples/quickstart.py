@@ -8,13 +8,13 @@ plus the embodied-carbon estimate.
 """
 import numpy as np
 
-from repro.core import CoreManager, Policy, carbon
+from repro.core import CoreManager, carbon
 
 HOURS = 6
 RATE = 3          # mean concurrent tasks per second
 
 
-def simulate(policy: Policy) -> CoreManager:
+def simulate(policy: str) -> CoreManager:
     mgr = CoreManager(num_cores=40, policy=policy,
                       rng=np.random.default_rng(0), idling_period_s=1.0)
     rng = np.random.default_rng(1)
@@ -33,15 +33,15 @@ def simulate(policy: Policy) -> CoreManager:
 
 def main() -> None:
     results = {}
-    for policy in (Policy.LINUX, Policy.PROPOSED):
+    for policy in ("linux", "proposed"):
         mgr = simulate(policy)
         deg = mgr.mean_frequency_degradation()
         results[policy] = deg
         active = int((mgr.c_state == 0).sum())
-        print(f"{policy.value:10s} mean_freq_degradation={deg:.5f} "
+        print(f"{policy:10s} mean_freq_degradation={deg:.5f} "
               f"freq_cv={mgr.frequency_cv():.4f} active_cores={active}/40")
 
-    est = carbon.estimate(results[Policy.LINUX], results[Policy.PROPOSED])
+    est = carbon.estimate(results["linux"], results["proposed"])
     print(f"\nCPU lifetime extension: {est.extension_factor:.2f}x "
           f"({est.extended_life_years:.1f} years)")
     print(f"Yearly CPU embodied carbon: "

@@ -12,10 +12,9 @@ import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.core import Policy
 from repro.models import Model
 from repro.serving.engine import InferenceEngine
-from repro.sim import carbon_comparison, run_policy_sweep
+from repro.sim import ExperimentConfig, carbon_comparison, run_policy_sweep
 
 
 def serve_demo() -> None:
@@ -24,7 +23,7 @@ def serve_demo() -> None:
     model = Model(cfg)
     params = model.init(jax.random.key(0))
     engine = InferenceEngine(model, params, max_batch=4, max_len=96,
-                             policy=Policy.PROPOSED, num_host_cores=16)
+                             policy="proposed", num_host_cores=16)
     rng = np.random.default_rng(0)
     t0 = time.time()
     for _ in range(12):
@@ -41,7 +40,8 @@ def serve_demo() -> None:
 
 def cluster_demo() -> None:
     print("=== cluster simulation (22 machines, Azure-like trace) ===")
-    res = run_policy_sweep(num_cores=40, rate_rps=60, duration_s=60, seed=0)
+    res = run_policy_sweep(ExperimentConfig(num_cores=40, rate_rps=60,
+                                            duration_s=60, seed=0))
     for name, m in res.items():
         print(f"{name:10s} deg_p99={m.mean_degradation_percentiles[99]:.5f} "
               f"idle_p90={m.idle_norm_percentiles[90]:+.3f} "

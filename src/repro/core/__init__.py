@@ -6,13 +6,22 @@ Public API:
   temperature — Table-1 C-state temperature/stress model
   mapping     — Algorithm 1 (Task-to-Core Mapping)
   idling      — Algorithm 2 (Selective Core Idling + reaction function)
-  manager     — CoreManager runtime (proposed + linux + least-aged policies)
+  policies    — pluggable CorePolicy registry (proposed, linux,
+                least-aged, round-robin, aging-greedy, + user-defined)
+  manager     — policy-agnostic CoreManager runtime
   carbon      — embodied-carbon amortization estimates
 """
-from repro.core import aging, carbon, idling, mapping, temperature, variation
-from repro.core.manager import CoreManager, ManagerMetrics, Policy
+from repro.core import (aging, carbon, idling, mapping, policies,
+                        temperature, variation)
+from repro.core.manager import (OVERSUBSCRIBED, CoreManager, ManagerMetrics,
+                                Policy)
+from repro.core.policies import (CorePolicy, CoreView, IdleCorrection,
+                                 available_policies, get_policy,
+                                 register_policy)
 
 __all__ = [
-    "aging", "carbon", "idling", "mapping", "temperature", "variation",
-    "CoreManager", "ManagerMetrics", "Policy",
+    "aging", "carbon", "idling", "mapping", "policies", "temperature",
+    "variation", "CoreManager", "ManagerMetrics", "Policy", "OVERSUBSCRIBED",
+    "CorePolicy", "CoreView", "IdleCorrection", "available_policies",
+    "get_policy", "register_policy",
 ]

@@ -2,33 +2,40 @@
 
 This is the paper's contribution as a deployable component (Fig. 3): it
 owns the per-core aging state of one inference server's CPU, routes every
-CPU inference task through a task-to-core policy, and (for the proposed
-technique) periodically runs Selective Core Idling.
+CPU inference task through a pluggable task-to-core policy
+(`repro.core.policies`), and applies the working-set corrections the
+policy returns from its periodic hook (Selective Core Idling for the
+proposed technique).
 
-Policies:
-  * PROPOSED   — Algorithm 1 mapping + Algorithm 2 selective idling.
-  * LINUX      — probabilistic task->core model of a stock Linux LLM
-                 inference server (built from captured CPU data, paper
-                 §6.1.1); all cores always C0.
-  * LEAST_AGED — Zhao'23: assign away from aged cores using cumulative
-                 executed work as the age estimate; all cores always C0.
-
-The manager is exact about NBTI bookkeeping: a core's dVth advances lazily
-with the ADF of the (C-state, allocated) regime it was in, and every
-regime change first settles the elapsed interval under the old ADF.
+The manager is policy-agnostic: policies only see a read-only `CoreView`
+(masks, dVth, f0, idle history, rng), while the manager keeps exclusive
+write access to the NBTI bookkeeping. A core's dVth advances lazily with
+the ADF of the (C-state, allocated) regime it was in, and every regime
+change first settles the elapsed interval under the old ADF.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
+import warnings
 
 import numpy as np
 
-from repro.core import aging, idling, mapping, temperature, variation
+from repro.core import aging, mapping, temperature, variation
+from repro.core.policies import (CorePolicy, CoreView, canonical_policy_name,
+                                 get_policy)
 from repro.core.temperature import CState
 
 
 class Policy(enum.Enum):
+    """Deprecated: the pre-registry fixed policy set.
+
+    Kept as a shim so `CoreManager(n, policy=Policy.PROPOSED)` and
+    friends keep working; new code passes registry names ("proposed",
+    "linux", "least-aged", "round-robin", "aging-greedy", ...) or a
+    `CorePolicy` instance. See `repro.core.policies`.
+    """
+
     PROPOSED = "proposed"
     LINUX = "linux"
     LEAST_AGED = "least-aged"
@@ -53,18 +60,20 @@ class CoreManager:
     def __init__(
         self,
         num_cores: int,
-        policy: Policy = Policy.PROPOSED,
+        policy: CorePolicy | Policy | str = "proposed",
         aging_params: aging.AgingParams = aging.DEFAULT_PARAMS,
         variation_params: variation.VariationParams | None = None,
         rng: np.random.Generator | None = None,
         idling_period_s: float = 1.0,
-        linux_stickiness: float = 0.3,
+        policy_opts: dict | None = None,
+        linux_stickiness: float | None = None,
     ):
         self.num_cores = num_cores
-        self.policy = policy
         self.params = aging_params
         self.idling_period_s = idling_period_s
         self.rng = rng if rng is not None else np.random.default_rng(0)
+        self.policy = self._resolve_policy(policy, policy_opts,
+                                           linux_stickiness)
         vp = variation_params or variation.VariationParams(
             f_nominal=aging_params.f_nominal)
         self.f0 = variation.sample_initial_frequencies(vp, num_cores, self.rng)
@@ -81,10 +90,39 @@ class CoreManager:
         self.core_of_task: dict[int, int] = {}
         self.task_start: dict[int, float] = {}
         self.oversub_tasks: set[int] = set()
-        self.linux_stickiness = linux_stickiness
-        self._linux_last_core = -1
         self.metrics = ManagerMetrics()
         self.now = 0.0
+        self._view = CoreView(self)
+
+    @staticmethod
+    def _resolve_policy(policy, policy_opts, linux_stickiness) -> CorePolicy:
+        if isinstance(policy, CorePolicy):
+            if policy_opts or linux_stickiness is not None:
+                raise TypeError("policy_opts/linux_stickiness only apply "
+                                "when the policy is given by name; pass them "
+                                "to the constructor of your CorePolicy "
+                                "instance instead")
+            return policy
+        if isinstance(policy, Policy):
+            warnings.warn(
+                "the Policy enum is deprecated; pass the policy name "
+                f"(policy={policy.value!r}) or a CorePolicy instance",
+                DeprecationWarning, stacklevel=3)
+            policy = policy.value
+        opts = dict(policy_opts or {})
+        if (linux_stickiness is not None
+                and canonical_policy_name(policy) == "linux"):
+            opts.setdefault("stickiness", linux_stickiness)
+        return get_policy(policy, **opts)
+
+    @property
+    def policy_name(self) -> str:
+        return self.policy.name
+
+    @property
+    def view(self) -> CoreView:
+        """Read-only view of this manager's per-core state."""
+        return self._view
 
     # ------------------------------------------------------------------ #
     # aging bookkeeping
@@ -107,13 +145,10 @@ class CoreManager:
                 self.params, float(self.dvth[i]), a, tau)
             self.last_update[i] = now
 
-    def settle_all(self, now: float) -> None:
-        """Vectorized settlement of every core (used by the periodic path
-        and by metric snapshots; mirrors the Pallas aging_update kernel)."""
-        tau = now - self.last_update
-        if not (tau > 0).any():
-            self.now = max(self.now, now)
-            return
+    def _settled_dvth(self, now: float) -> np.ndarray:
+        """Every core's dVth advanced to `now` under its current regime,
+        WITHOUT mutating state (pure; also backs `CoreView.dvth_now`)."""
+        tau = np.maximum(now - self.last_update, 0.0)
         allocated = self.task_of_core >= 0
         active = self.c_state == CState.ACTIVE
         temps = np.where(
@@ -125,8 +160,15 @@ class CoreManager:
         stress = np.where(active, temperature.STRESS_ACTIVE,
                           temperature.STRESS_DEEP_IDLE)
         adf_vals = aging.adf(self.params, temps, stress)
-        self.dvth = aging.advance_dvth(self.params, self.dvth, adf_vals,
-                                       np.maximum(tau, 0.0))
+        return aging.advance_dvth(self.params, self.dvth, adf_vals, tau)
+
+    def settle_all(self, now: float) -> None:
+        """Vectorized settlement of every core (used by the periodic path
+        and by metric snapshots; mirrors the Pallas aging_update kernel)."""
+        if not (now - self.last_update > 0).any():
+            self.now = max(self.now, now)
+            return
+        self.dvth = self._settled_dvth(now)
         self.last_update = np.maximum(self.last_update, now)
         self.now = max(self.now, now)
 
@@ -134,7 +176,7 @@ class CoreManager:
     # task lifecycle
     # ------------------------------------------------------------------ #
     def assign(self, task_id: int, now: float) -> float:
-        """Route one CPU inference task to a core (Algorithm 1 / baseline).
+        """Route one CPU inference task to a core via the policy.
 
         Returns the execution speed factor (degraded f / nominal f) the
         simulator should apply to the task duration; oversubscribed tasks
@@ -142,16 +184,7 @@ class CoreManager:
         """
         self.now = max(self.now, now)
         self.metrics.assigns += 1
-        active_mask = self.c_state == CState.ACTIVE
-        assigned_mask = self.task_of_core >= 0
-
-        if self.policy is Policy.PROPOSED:
-            core = mapping.select_core(active_mask, assigned_mask,
-                                       self.idle_history)
-        elif self.policy is Policy.LEAST_AGED:
-            core = self._select_least_work(active_mask, assigned_mask)
-        else:
-            core = self._select_linux(active_mask, assigned_mask)
+        core = self.policy.select_core(self._view)
 
         if core < 0:
             self.oversub_tasks.add(task_id)
@@ -188,10 +221,16 @@ class CoreManager:
         self.cum_work[core] += now - start
         self.task_of_core[core] = -1
         self.idle_since[core] = now
+        self.policy.on_release(self._view, core)
         self._promote_oversubscribed(now)
 
     def _promote_oversubscribed(self, now: float) -> None:
-        """When a core frees up, move a waiting oversubscribed task onto it."""
+        """When a core frees up, move a waiting oversubscribed task onto it.
+
+        Promotion is manager-internal FIFO and always uses the Algorithm-1
+        idle-score mapping (not the policy): a promoted task usually has
+        exactly one candidate core — the one that just freed.
+        """
         while self.oversub_tasks:
             active_mask = self.c_state == CState.ACTIVE
             assigned_mask = self.task_of_core >= 0
@@ -212,38 +251,12 @@ class CoreManager:
             self.task_start[task_id] = now
 
     # ------------------------------------------------------------------ #
-    # baseline selectors
-    # ------------------------------------------------------------------ #
-    def _select_least_work(self, active_mask, assigned_mask) -> int:
-        cand = active_mask & ~assigned_mask
-        if not cand.any():
-            return -1
-        return int(np.argmin(np.where(cand, self.cum_work, np.inf)))
-
-    def _select_linux(self, active_mask, assigned_mask) -> int:
-        """Probabilistic model of stock-Linux task placement: CFS mostly
-        picks an idle core but exhibits cache-affinity stickiness (captured
-        distribution per Wilkins'24 is skewed, not uniform)."""
-        cand = np.flatnonzero(active_mask & ~assigned_mask)
-        if cand.size == 0:
-            return -1
-        last = self._linux_last_core
-        if last in cand and self.rng.random() < self.linux_stickiness:
-            core = last
-        else:
-            # Skewed preference for low-numbered cores (topology order),
-            # matching the packed distributions seen in server captures.
-            w = 1.0 / (1.0 + 0.05 * np.arange(cand.size))
-            core = int(self.rng.choice(cand, p=w / w.sum()))
-        self._linux_last_core = core
-        return core
-
-    # ------------------------------------------------------------------ #
-    # periodic control (Algorithm 2) + metrics
+    # periodic control + metrics
     # ------------------------------------------------------------------ #
     def periodic(self, now: float) -> None:
         """Run once per idling period: settle aging accurately, sample
-        metrics, and (PROPOSED only) execute Selective Core Idling."""
+        metrics, and apply the policy's working-set correction (Selective
+        Core Idling for the proposed technique; baselines return None)."""
         self.settle_all(now)
         n = self.num_cores
         active = int((self.c_state == CState.ACTIVE).sum())
@@ -254,26 +267,29 @@ class CoreManager:
         self.metrics.task_count_samples.append(assigned + oversub)
         self.metrics.oversub_task_seconds += oversub * self.idling_period_s
 
-        if self.policy is not Policy.PROPOSED:
+        corr = self.policy.periodic(self._view)
+        if corr is None:
             return
-        corr = idling.core_correction(n, active, assigned, oversub)
-        to_idle, to_wake = idling.apply_correction(
-            corr,
-            self.c_state == CState.ACTIVE,
-            self.task_of_core >= 0,
-            self.dvth,
-        )
-        for i in to_idle:
+        # Validate BEFORE mutating: a partial application would leave the
+        # manager's bookkeeping corrupted, the exact failure mode the
+        # read-only CoreView exists to prevent.
+        busy = np.asarray(corr.to_idle)[
+            self.task_of_core[corr.to_idle] >= 0] if len(corr.to_idle) else []
+        if len(busy):
+            raise ValueError(f"policy {self.policy.name!r} tried to idle "
+                             f"cores {[int(i) for i in busy]} while they "
+                             f"run tasks")
+        for i in corr.to_idle:
             # settle_all already brought core i to `now`; close its idle
             # window and power-gate.
             idle_dur = now - self.idle_since[i]
             mapping.record_idle_end(self.idle_history, self.hist_pos, int(i),
                                     max(idle_dur, 0.0))
             self.c_state[i] = CState.DEEP_IDLE
-        for i in to_wake:
+        for i in corr.to_wake:
             self.c_state[i] = CState.ACTIVE
             self.idle_since[i] = now
-        if len(to_wake):
+        if len(corr.to_wake):
             self._promote_oversubscribed(now)
 
     # ------------------------------------------------------------------ #
@@ -310,11 +326,13 @@ class CoreManager:
 
 
 # Cache exp() factors per (params, temperature) — only 3 temperatures exist.
-_ADF_CACHE: dict[tuple[int, float], float] = {}
+# Keyed on the frozen params value (hashable dataclass), NOT id(params): a
+# GC'd-and-reused id could otherwise serve stale factors for new params.
+_ADF_CACHE: dict[tuple[aging.AgingParams, float], float] = {}
 
 
 def _adf_unscaled_cached(params: aging.AgingParams, temp_c: float) -> float:
-    key = (id(params), temp_c)
+    key = (params, temp_c)
     v = _ADF_CACHE.get(key)
     if v is None:
         import math

@@ -1,0 +1,37 @@
+"""The paper's technique: Algorithm 1 mapping + Algorithm 2 idling."""
+from __future__ import annotations
+
+from repro.core import idling, mapping
+from repro.core.policies.base import CorePolicy, CoreView, IdleCorrection
+from repro.core.policies.registry import register_policy
+
+
+@register_policy("proposed")
+class ProposedPolicy(CorePolicy):
+    """Aging-aware core management (paper Algorithms 1 + 2).
+
+    Tasks go to the free working-set core with the highest idle score
+    (sum of its last eight idle durations — a cheap lesser-aged
+    estimate), and a per-period reaction function sizes the working set
+    to throughput, power-gating spare cores most-aged-first so their
+    NBTI aging halts.
+    """
+
+    def select_core(self, view: CoreView) -> int:
+        return mapping.select_core(view.active_mask, view.assigned_mask,
+                                   view.idle_history)
+
+    def periodic(self, view: CoreView) -> IdleCorrection | None:
+        active_mask = view.active_mask
+        assigned_mask = view.assigned_mask
+        corr = idling.core_correction(
+            view.num_cores,
+            int(active_mask.sum()),
+            int(assigned_mask.sum()),
+            view.oversub_count,
+        )
+        to_idle, to_wake = idling.apply_correction(
+            corr, active_mask, assigned_mask, view.dvth)
+        if not (len(to_idle) or len(to_wake)):
+            return None
+        return IdleCorrection(to_idle=to_idle, to_wake=to_wake)

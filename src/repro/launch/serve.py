@@ -12,7 +12,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
-from repro.core import Policy
+from repro.core import available_policies
 from repro.models import Model
 from repro.serving.engine import InferenceEngine
 
@@ -27,7 +27,7 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--policy", default="proposed",
-                    choices=[p.value for p in Policy])
+                    choices=list(available_policies()))
     ap.add_argument("--host-cores", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -37,7 +37,7 @@ def main() -> None:
     params = model.init(jax.random.key(args.seed))
     engine = InferenceEngine(
         model, params, max_batch=args.max_batch, max_len=args.max_len,
-        policy=Policy(args.policy), num_host_cores=args.host_cores)
+        policy=args.policy, num_host_cores=args.host_cores)
 
     rng = np.random.default_rng(args.seed)
     t0 = time.time()

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import CoreManager, Policy
+from repro.core import CoreManager, CorePolicy, Policy
 from repro.models import Model
 from repro.sim.tasks import CPUTask
 
@@ -37,7 +37,7 @@ class Request:
 class InferenceEngine:
     def __init__(self, model: Model, params, max_batch: int = 8,
                  max_len: int = 256,
-                 policy: Policy = Policy.PROPOSED,
+                 policy: CorePolicy | Policy | str = "proposed",
                  num_host_cores: int = 16,
                  eos_id: int | None = None,
                  clock: Callable[[], float] = time.monotonic,
@@ -195,7 +195,7 @@ class InferenceEngine:
     def host_cpu_report(self) -> dict:
         m = self.core_manager
         return {
-            "policy": m.policy.value,
+            "policy": m.policy_name,
             "frequencies": m.frequencies(self._now()).tolist(),
             "cv": m.frequency_cv(),
             "mean_degradation": m.mean_frequency_degradation(),

@@ -19,7 +19,8 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import CoreManager, Policy
+from repro.core import OVERSUBSCRIBED, CoreManager
+from repro.sim.config import ExperimentConfig
 from repro.sim.events import EventQueue
 from repro.sim.tasks import CPUTask
 from repro.sim.trace import Request
@@ -47,14 +48,17 @@ class RequestState:
 class Machine:
     """One inference server: host CPU (CoreManager) + a GPU instance."""
 
-    def __init__(self, machine_id: int, num_cores: int, policy: Policy,
-                 queue: EventQueue, seed: int, idling_period_s: float = 1.0):
+    def __init__(self, machine_id: int, cfg: ExperimentConfig,
+                 queue: EventQueue):
         self.machine_id = machine_id
         self.queue = queue
+        # Each machine instantiates its own policy from the registry name
+        # (policies carry per-server state and cannot be shared).
         self.manager = CoreManager(
-            num_cores, policy=policy,
-            rng=np.random.default_rng(seed * 1000 + machine_id),
-            idling_period_s=idling_period_s,
+            cfg.num_cores, policy=cfg.policy,
+            policy_opts=cfg.policy_options,
+            rng=np.random.default_rng(cfg.seed * 1000 + machine_id),
+            idling_period_s=cfg.idling_period_s,
         )
         self.running_cpu_tasks = 0
         self.task_count_samples: list[int] = []
@@ -66,7 +70,7 @@ class Machine:
         now = self.queue.now
         speed = self.manager.assign(task.task_id, now)
         dur = task.duration_s / max(speed, 1e-6)
-        if self.manager.core_of_task.get(task.task_id) == -1:  # oversubscribed
+        if self.manager.core_of_task.get(task.task_id) == OVERSUBSCRIBED:
             dur *= OVERSUB_SLOWDOWN
         self.running_cpu_tasks += 1
 
@@ -182,19 +186,16 @@ class TokenInstance:
 class Cluster:
     """22-machine phase-splitting cluster + cluster-level scheduler."""
 
-    def __init__(self, policy: Policy, num_cores: int, seed: int = 0,
-                 n_prompt: int = 5, n_token: int = 17,
-                 idling_period_s: float = 1.0):
+    def __init__(self, cfg: ExperimentConfig):
+        self.cfg = cfg
         self.queue = EventQueue()
-        n_machines = n_prompt + n_token
         self.machines = [
-            Machine(i, num_cores, policy, self.queue, seed, idling_period_s)
-            for i in range(n_machines)
+            Machine(i, cfg, self.queue) for i in range(cfg.n_machines)
         ]
         self.prompt_instances = [PromptInstance(m)
-                                 for m in self.machines[:n_prompt]]
+                                 for m in self.machines[:cfg.n_prompt]]
         self.token_instances = [TokenInstance(m)
-                                for m in self.machines[n_prompt:]]
+                                for m in self.machines[cfg.n_prompt:]]
         self.completed: list[RequestState] = []
         for ti in self.token_instances:
             ti.on_request_done = self._request_done

@@ -1,0 +1,80 @@
+"""ExperimentConfig — the one frozen object that defines an experiment.
+
+Replaces the positional-kwarg piles previously duplicated across
+`sim/runner.py`, `benchmarks/*` and `examples/*`:
+
+    cfg = ExperimentConfig(policy="proposed", num_cores=40,
+                           rate_rps=70.0, duration_s=120.0, seed=1)
+    metrics = run_experiment(cfg)
+    sweep = run_policy_sweep(cfg, policies=("linux", "proposed"))
+
+The policy is addressed by registry name (see `repro.core.policies`);
+`policy_opts` carries constructor options for it (e.g.
+`policy="linux", policy_opts={"stickiness": 0.5}`). The dataclass is
+frozen and hashable, so configs can key caches and result dicts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+from repro.core.policies import canonical_policy_name
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentConfig:
+    """Full specification of one cluster experiment (paper §6.1)."""
+
+    # policy under test (registry name + constructor options)
+    policy: str = "proposed"
+    policy_opts: tuple[tuple[str, Any], ...] = ()
+    # per-machine host CPU
+    num_cores: int = 40
+    idling_period_s: float = 1.0
+    # cluster topology (Splitwise phase-splitting deployment)
+    n_prompt: int = 5
+    n_token: int = 17
+    # trace (Azure-conversation-like arrival process)
+    rate_rps: float = 60.0
+    duration_s: float = 120.0
+    # bookkeeping
+    seed: int = 0
+    sample_period_s: float = 0.1
+
+    def __post_init__(self):
+        # Normalize: accept the legacy Policy enum, any hyphen/underscore
+        # spelling, and a dict for policy_opts — store canonical + frozen.
+        name = canonical_policy_name(getattr(self.policy, "value",
+                                             self.policy))
+        object.__setattr__(self, "policy", name)
+        opts = self.policy_opts
+        if isinstance(opts, Mapping):
+            opts = opts.items()
+        # Always sorted, so equal logical opts hash equally regardless of
+        # the order (or form) they were supplied in.
+        object.__setattr__(self, "policy_opts", tuple(sorted(opts)))
+        if self.num_cores < 1:
+            raise ValueError(f"num_cores must be >= 1, got {self.num_cores}")
+        if self.n_prompt < 1 or self.n_token < 1:
+            raise ValueError("need at least one prompt and one token "
+                             f"instance, got {self.n_prompt}/{self.n_token}")
+
+    @property
+    def n_machines(self) -> int:
+        return self.n_prompt + self.n_token
+
+    @property
+    def policy_options(self) -> dict[str, Any]:
+        """`policy_opts` as a plain kwargs dict."""
+        return dict(self.policy_opts)
+
+    def replace(self, **changes) -> "ExperimentConfig":
+        """Frozen-friendly copy-with-overrides."""
+        return dataclasses.replace(self, **changes)
+
+    def with_policy(self, policy: str,
+                    **policy_opts) -> "ExperimentConfig":
+        """Same experiment, different policy (opts reset unless given)."""
+        return dataclasses.replace(self, policy=policy,
+                                   policy_opts=tuple(sorted(
+                                       policy_opts.items())))

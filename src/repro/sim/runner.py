@@ -1,41 +1,70 @@
-"""Experiment runner: replay a trace against a cluster under a policy."""
+"""Experiment runner: replay a trace against a cluster under a policy.
+
+Canonical API (PR 1): build a frozen `ExperimentConfig` and pass it to
+`run_experiment` / `run_policy_sweep`. The pre-registry signature
+(`run_experiment(Policy.PROPOSED, num_cores=..., ...)`) still works as a
+deprecated shim.
+"""
 from __future__ import annotations
 
-from repro.core import Policy
+import warnings
+
+from repro.core.manager import Policy
+from repro.core.policies import canonical_policy_name
 from repro.sim import metrics as metrics_mod
 from repro.sim.cluster import Cluster
+from repro.sim.config import ExperimentConfig
 from repro.sim.tasks import reset_task_ids
 from repro.sim.trace import TraceConfig, generate
 
+DEFAULT_SWEEP = ("linux", "least-aged", "proposed")
 
-def run_experiment(
-    policy: Policy,
-    num_cores: int = 40,
-    rate_rps: float = 60.0,
-    duration_s: float = 120.0,
-    seed: int = 0,
-    n_prompt: int = 5,
-    n_token: int = 17,
-    idling_period_s: float = 1.0,
-) -> metrics_mod.ExperimentMetrics:
+
+def _coerce_config(cfg, legacy_kw) -> ExperimentConfig:
+    if isinstance(cfg, ExperimentConfig):
+        if legacy_kw:
+            raise TypeError("pass experiment parameters inside the "
+                            f"ExperimentConfig, not as kwargs: {legacy_kw}")
+        return cfg
+    # Legacy shim: first argument was a Policy enum (or name string).
+    warnings.warn(
+        "run_experiment(policy, **kwargs) is deprecated; pass an "
+        "ExperimentConfig instead", DeprecationWarning, stacklevel=3)
+    name = getattr(cfg, "value", cfg)
+    return ExperimentConfig(policy=name, **legacy_kw)
+
+
+def run_experiment(cfg: ExperimentConfig | Policy | str,
+                   **legacy_kw) -> metrics_mod.ExperimentMetrics:
+    cfg = _coerce_config(cfg, legacy_kw)
     reset_task_ids()
-    trace = generate(TraceConfig(rate_rps=rate_rps, duration_s=duration_s,
-                                 seed=seed))
-    cluster = Cluster(policy, num_cores, seed=seed, n_prompt=n_prompt,
-                      n_token=n_token, idling_period_s=idling_period_s)
-    cluster.run(trace, duration_s)
-    return metrics_mod.collect(cluster, policy.value, num_cores, rate_rps)
+    trace = generate(TraceConfig(rate_rps=cfg.rate_rps,
+                                 duration_s=cfg.duration_s, seed=cfg.seed))
+    cluster = Cluster(cfg)
+    cluster.run(trace, cfg.duration_s, sample_period_s=cfg.sample_period_s)
+    return metrics_mod.collect(cluster, cfg.policy, cfg.num_cores,
+                               cfg.rate_rps)
 
 
 def run_policy_sweep(
-    num_cores: int = 40,
-    rate_rps: float = 60.0,
-    duration_s: float = 120.0,
-    seed: int = 0,
-    policies=(Policy.LINUX, Policy.LEAST_AGED, Policy.PROPOSED),
+    cfg: ExperimentConfig | None = None,
+    policies=DEFAULT_SWEEP,
+    **legacy_kw,
 ) -> dict[str, metrics_mod.ExperimentMetrics]:
-    return {
-        p.value: run_experiment(p, num_cores=num_cores, rate_rps=rate_rps,
-                                duration_s=duration_s, seed=seed)
-        for p in policies
-    }
+    """Run the same experiment under each policy, keyed by registry name.
+
+    Policies are given by string name (any registered policy works — no
+    enum import needed); `cfg.policy_opts` only apply to the sweep entry
+    matching `cfg.policy`.
+    """
+    if cfg is None:
+        cfg = ExperimentConfig(**legacy_kw)
+    elif legacy_kw:
+        raise TypeError("pass experiment parameters inside the "
+                        f"ExperimentConfig, not as kwargs: {legacy_kw}")
+    out = {}
+    for p in policies:
+        name = canonical_policy_name(getattr(p, "value", p))
+        run_cfg = cfg if name == cfg.policy else cfg.with_policy(name)
+        out[run_cfg.policy] = run_experiment(run_cfg)
+    return out

@@ -1,9 +1,12 @@
-"""Unit + property tests for the NBTI aging model (paper §3.2)."""
+"""Unit + property tests for the NBTI aging model (paper §3.2).
+
+Property tests guard `hypothesis` with pytest.importorskip so minimal
+environments still run the unit tests.
+"""
 import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import aging
 from repro.core.aging import DEFAULT_PARAMS, TEN_YEARS_S
@@ -61,46 +64,71 @@ class TestRecursion:
 
 
 class TestProperties:
-    @given(
-        dvth=st.floats(0.0, 0.1),
-        tau=st.floats(0.0, 1e8),
-        temp=st.sampled_from([48.0, 51.08, 54.0]),
-    )
-    @settings(max_examples=200, deadline=None)
-    def test_monotone_nondecreasing(self, dvth, tau, temp):
+    def test_monotone_nondecreasing(self):
         """Aging never reverses (no recovery modeled, like the paper)."""
-        a = float(aging.adf(DEFAULT_PARAMS, temp, 1.0))
-        out = aging.advance_dvth_scalar(DEFAULT_PARAMS, dvth, a, tau)
-        assert out >= dvth - 1e-15
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
 
-    @given(
-        dvth=st.floats(0.0, 0.05),
-        t1=st.floats(1.0, 1e6),
-        t2=st.floats(1.0, 1e6),
-    )
-    @settings(max_examples=200, deadline=None)
-    def test_interval_additivity(self, dvth, t1, t2):
+        @given(
+            dvth=st.floats(0.0, 0.1),
+            tau=st.floats(0.0, 1e8),
+            temp=st.sampled_from([48.0, 51.08, 54.0]),
+        )
+        @settings(max_examples=200, deadline=None)
+        def run(dvth, tau, temp):
+            a = float(aging.adf(DEFAULT_PARAMS, temp, 1.0))
+            out = aging.advance_dvth_scalar(DEFAULT_PARAMS, dvth, a, tau)
+            assert out >= dvth - 1e-15
+
+        run()
+
+    def test_interval_additivity(self):
         """advance(t1) ∘ advance(t2) == advance(t1 + t2) at constant ADF —
         the core invariant that makes lazy settlement correct."""
-        a = float(aging.adf(DEFAULT_PARAMS, 54.0, 1.0))
-        seq = aging.advance_dvth_scalar(DEFAULT_PARAMS, dvth, a, t1)
-        seq = aging.advance_dvth_scalar(DEFAULT_PARAMS, seq, a, t2)
-        direct = aging.advance_dvth_scalar(DEFAULT_PARAMS, dvth, a, t1 + t2)
-        assert seq == pytest.approx(direct, rel=1e-9)
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
 
-    @given(tau=st.floats(1.0, 1e8))
-    @settings(max_examples=100, deadline=None)
-    def test_frequency_bounded(self, tau):
-        dvth = aging.dvth_after(DEFAULT_PARAMS, 54.0, 1.0, tau)
-        f = aging.frequency_scalar(DEFAULT_PARAMS, 1.0, dvth)
-        assert 0.0 < f <= 1.0
+        @given(
+            dvth=st.floats(0.0, 0.05),
+            t1=st.floats(1.0, 1e6),
+            t2=st.floats(1.0, 1e6),
+        )
+        @settings(max_examples=200, deadline=None)
+        def run(dvth, t1, t2):
+            a = float(aging.adf(DEFAULT_PARAMS, 54.0, 1.0))
+            seq = aging.advance_dvth_scalar(DEFAULT_PARAMS, dvth, a, t1)
+            seq = aging.advance_dvth_scalar(DEFAULT_PARAMS, seq, a, t2)
+            direct = aging.advance_dvth_scalar(DEFAULT_PARAMS, dvth, a,
+                                               t1 + t2)
+            assert seq == pytest.approx(direct, rel=1e-9)
 
-    @given(temp=st.floats(40.0, 80.0))
-    @settings(max_examples=100, deadline=None)
-    def test_adf_increases_with_temperature(self, temp):
-        a1 = float(aging.adf(DEFAULT_PARAMS, temp, 1.0))
-        a2 = float(aging.adf(DEFAULT_PARAMS, temp + 5.0, 1.0))
-        assert a2 > a1
+        run()
+
+    def test_frequency_bounded(self):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        @given(tau=st.floats(1.0, 1e8))
+        @settings(max_examples=100, deadline=None)
+        def run(tau):
+            dvth = aging.dvth_after(DEFAULT_PARAMS, 54.0, 1.0, tau)
+            f = aging.frequency_scalar(DEFAULT_PARAMS, 1.0, dvth)
+            assert 0.0 < f <= 1.0
+
+        run()
+
+    def test_adf_increases_with_temperature(self):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        @given(temp=st.floats(40.0, 80.0))
+        @settings(max_examples=100, deadline=None)
+        def run(temp):
+            a1 = float(aging.adf(DEFAULT_PARAMS, temp, 1.0))
+            a2 = float(aging.adf(DEFAULT_PARAMS, temp + 5.0, 1.0))
+            assert a2 > a1
+
+        run()
 
 
 class TestSublinearity:

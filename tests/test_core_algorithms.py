@@ -1,10 +1,13 @@
 """Tests for Algorithm 1 (Task-to-Core Mapping), Algorithm 2 (Selective
-Core Idling), the reaction function, process variation, and carbon model."""
+Core Idling), the reaction function, process variation, and carbon model.
+
+Property tests guard `hypothesis` with pytest.importorskip so minimal
+environments still run the unit tests.
+"""
 import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import carbon, idling, mapping, variation
 from repro.core.idling import reaction_function
@@ -25,12 +28,18 @@ class TestReactionFunction:
         assert abs(reaction_function(1.0)) <= 1.0 + 1e-6
         assert abs(reaction_function(-1.0)) <= 1.0
 
-    @given(e=st.floats(-1.0, 1.0))
-    @settings(max_examples=200, deadline=None)
-    def test_sign_preserving_monotone(self, e):
-        f = reaction_function(e)
-        assert math.copysign(1, f) == math.copysign(1, e) or f == 0.0
-        assert reaction_function(min(e + 0.01, 1.0)) >= f - 1e-12
+    def test_sign_preserving_monotone(self):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        @given(e=st.floats(-1.0, 1.0))
+        @settings(max_examples=200, deadline=None)
+        def run(e):
+            f = reaction_function(e)
+            assert math.copysign(1, f) == math.copysign(1, e) or f == 0.0
+            assert reaction_function(min(e + 0.01, 1.0)) >= f - 1e-12
+
+        run()
 
 
 class TestCoreCorrection:
@@ -51,14 +60,20 @@ class TestCoreCorrection:
         c = idling.core_correction(16, 16, 16, 1000)
         assert c == 0  # tasks capped at N, e = 0
 
-    @given(n=st.integers(2, 128), active=st.integers(0, 128),
-           tasks=st.integers(0, 256), oversub=st.integers(0, 64))
-    @settings(max_examples=300, deadline=None)
-    def test_correction_bounds(self, n, active, tasks, oversub):
-        active = min(active, n)
-        tasks = min(tasks, active)
-        c = idling.core_correction(n, active, tasks, oversub)
-        assert -n <= c <= n
+    def test_correction_bounds(self):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        @given(n=st.integers(2, 128), active=st.integers(0, 128),
+               tasks=st.integers(0, 256), oversub=st.integers(0, 64))
+        @settings(max_examples=300, deadline=None)
+        def run(n, active, tasks, oversub):
+            active = min(active, n)
+            tasks = min(tasks, active)
+            c = idling.core_correction(n, active, tasks, oversub)
+            assert -n <= c <= n
+
+        run()
 
 
 class TestApplyCorrection:
@@ -127,21 +142,27 @@ class TestMapping:
         # last 8 entries survive: 4..11
         assert set(hist[0]) == set(float(k) for k in range(4, 12))
 
-    @given(n=st.integers(1, 64), seed=st.integers(0, 1000))
-    @settings(max_examples=100, deadline=None)
-    def test_selected_core_is_valid(self, n, seed):
-        rng = np.random.default_rng(seed)
-        active = rng.random(n) < 0.7
-        tasks = (rng.random(n) < 0.4) & active
-        hist = rng.uniform(0, 10, (n, mapping.IDLE_HISTORY_LEN))
-        core = mapping.select_core(active, tasks, hist)
-        if core == -1:
-            assert not (active & ~tasks).any()
-        else:
-            assert active[core] and not tasks[core]
-            cand = active & ~tasks
-            assert hist[core].sum() == pytest.approx(
-                hist[cand].sum(axis=1).max())
+    def test_selected_core_is_valid(self):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        @given(n=st.integers(1, 64), seed=st.integers(0, 1000))
+        @settings(max_examples=100, deadline=None)
+        def run(n, seed):
+            rng = np.random.default_rng(seed)
+            active = rng.random(n) < 0.7
+            tasks = (rng.random(n) < 0.4) & active
+            hist = rng.uniform(0, 10, (n, mapping.IDLE_HISTORY_LEN))
+            core = mapping.select_core(active, tasks, hist)
+            if core == -1:
+                assert not (active & ~tasks).any()
+            else:
+                assert active[core] and not tasks[core]
+                cand = active & ~tasks
+                assert hist[core].sum() == pytest.approx(
+                    hist[cand].sum(axis=1).max())
+
+        run()
 
 
 class TestVariation:
@@ -203,9 +224,15 @@ class TestCarbon:
         e = carbon.estimate(0.01, 0.0)
         assert e.extension_factor == 100.0
 
-    @given(dl=st.floats(1e-6, 1.0), dt=st.floats(1e-6, 1.0))
-    @settings(max_examples=200, deadline=None)
-    def test_reduction_bounded(self, dl, dt):
-        e = carbon.estimate(dl, dt)
-        assert e.reduction_frac < 1.0
-        assert e.yearly_kgco2eq > 0
+    def test_reduction_bounded(self):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        @given(dl=st.floats(1e-6, 1.0), dt=st.floats(1e-6, 1.0))
+        @settings(max_examples=200, deadline=None)
+        def run(dl, dt):
+            e = carbon.estimate(dl, dt)
+            assert e.reduction_frac < 1.0
+            assert e.yearly_kgco2eq > 0
+
+        run()

@@ -156,6 +156,7 @@ class TestManagerInvariants:
     interleaving of assigns/releases/periodics."""
 
     def test_random_schedule_invariants(self):
+        pytest.importorskip("hypothesis")
         from hypothesis import given, settings, strategies as st
 
         @given(seed=st.integers(0, 10_000),

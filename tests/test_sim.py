@@ -3,8 +3,9 @@ import numpy as np
 import pytest
 
 from repro.core import Policy
-from repro.sim import (EventQueue, TraceConfig, carbon_comparison, generate,
-                       run_experiment, run_policy_sweep, trace_stats)
+from repro.sim import (EventQueue, ExperimentConfig, TraceConfig,
+                       carbon_comparison, generate, run_experiment,
+                       run_policy_sweep, trace_stats)
 
 
 class TestEventQueue:
@@ -63,8 +64,8 @@ class TestTrace:
 class TestClusterEndToEnd:
     @pytest.fixture(scope="class")
     def sweep(self):
-        return run_policy_sweep(num_cores=40, rate_rps=60, duration_s=30,
-                                seed=0)
+        return run_policy_sweep(ExperimentConfig(num_cores=40, rate_rps=60,
+                                                 duration_s=30, seed=0))
 
     def test_requests_complete(self, sweep):
         for m in sweep.values():
@@ -114,7 +115,20 @@ class TestClusterEndToEnd:
         assert ours < base * 1.10
 
     def test_determinism(self):
-        a = run_experiment(Policy.PROPOSED, rate_rps=40, duration_s=10, seed=5)
-        b = run_experiment(Policy.PROPOSED, rate_rps=40, duration_s=10, seed=5)
+        cfg = ExperimentConfig(policy="proposed", rate_rps=40, duration_s=10,
+                               seed=5)
+        a = run_experiment(cfg)
+        b = run_experiment(cfg)
+        assert a.freq_cv_percentiles == b.freq_cv_percentiles
+        assert a.completed == b.completed
+
+    def test_legacy_enum_shim_matches_config_api(self):
+        """The deprecated run_experiment(Policy, **kw) signature must
+        produce the same metrics as the ExperimentConfig path."""
+        with pytest.deprecated_call():
+            a = run_experiment(Policy.PROPOSED, rate_rps=40, duration_s=10,
+                               seed=5)
+        b = run_experiment(ExperimentConfig(policy="proposed", rate_rps=40,
+                                            duration_s=10, seed=5))
         assert a.freq_cv_percentiles == b.freq_cv_percentiles
         assert a.completed == b.completed
