@@ -1,11 +1,34 @@
-"""Shared benchmark helpers: CSV emission + experiment cache."""
+"""Shared benchmark helpers: CSV emission, experiment cache, and the
+--scenario CLI axis shared by fig2/fig6/fig8."""
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments")
+DEFAULT_SCENARIOS = ("conversation-poisson",)
+
+
+def add_scenario_arg(parser: argparse.ArgumentParser) -> None:
+    parser.add_argument(
+        "--scenario", action="append", default=None, metavar="NAME",
+        help="workload scenario for the trace-driven figures "
+        f"(fig2/fig6/fig7/fig8); repeatable; default {DEFAULT_SCENARIOS[0]}; "
+        "fig1/ablations/kern are scenario-independent. See "
+        "repro.workloads.available_scenarios()")
+
+
+def resolve_scenarios(args: argparse.Namespace) -> tuple[str, ...]:
+    return tuple(args.scenario) if args.scenario else DEFAULT_SCENARIOS
+
+
+def parse_scenarios(description: str | None = None) -> tuple[str, ...]:
+    """One-stop argparse for the fig drivers' `__main__` blocks."""
+    ap = argparse.ArgumentParser(description=description)
+    add_scenario_arg(ap)
+    return resolve_scenarios(ap.parse_args())
 
 
 def emit(name: str, rows: list[dict]) -> None:

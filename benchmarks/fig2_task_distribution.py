@@ -1,33 +1,41 @@
 """Paper Fig. 2: distribution of concurrent inference tasks per machine
-at different throughput levels (uncovers CPU underutilization O1/O2)."""
+at different throughput levels (uncovers CPU underutilization O1/O2).
+
+Accepts `--scenario` (repeatable) to profile task concurrency under any
+registered workload scenario — bursty/diurnal arrivals shift the O2
+burst statistics substantially vs homogeneous Poisson.
+"""
 from __future__ import annotations
 
 import numpy as np
 
 from repro.sim import ExperimentConfig, run_experiment
 
-from benchmarks.common import emit
+from benchmarks.common import DEFAULT_SCENARIOS, emit, parse_scenarios
 
 
-def run(duration_s: float = 60.0, rates=(40, 60, 80, 100)) -> list[dict]:
+def run(duration_s: float = 60.0, rates=(40, 60, 80, 100),
+        scenarios=DEFAULT_SCENARIOS) -> list[dict]:
     rows = []
-    for rate in rates:
-        m = run_experiment(ExperimentConfig(
-            policy="linux", num_cores=40, rate_rps=rate,
-            duration_s=duration_s, seed=0))
-        samples = np.concatenate(m.per_machine_task_samples)
-        rows.append({
-            "rate_rps": rate,
-            "task_mean": round(float(samples.mean()), 3),
-            "task_p50": float(np.percentile(samples, 50)),
-            "task_p99": float(np.percentile(samples, 99)),
-            "task_max": int(samples.max()),
-            "o1_underutilized": bool(samples.mean() < 40 * 0.25),
-            "o2_bursts": bool(samples.max() >= 5 * samples.mean()),
-        })
+    for scenario in scenarios:
+        for rate in rates:
+            m = run_experiment(ExperimentConfig(
+                policy="linux", num_cores=40, rate_rps=rate,
+                duration_s=duration_s, seed=0, scenario=scenario))
+            samples = np.concatenate(m.per_machine_task_samples)
+            rows.append({
+                "scenario": m.scenario,
+                "rate_rps": rate,
+                "task_mean": round(float(samples.mean()), 3),
+                "task_p50": float(np.percentile(samples, 50)),
+                "task_p99": float(np.percentile(samples, 99)),
+                "task_max": int(samples.max()),
+                "o1_underutilized": bool(samples.mean() < 40 * 0.25),
+                "o2_bursts": bool(samples.max() >= 5 * samples.mean()),
+            })
     emit("fig2_task_distribution", rows)
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    run(scenarios=parse_scenarios(__doc__))

@@ -24,9 +24,12 @@ def main() -> None:
                     help="short traces (CI); full runs match the paper")
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig2,fig6,fig7,fig8,kern,ablations")
+    from benchmarks.common import add_scenario_arg, resolve_scenarios
+    add_scenario_arg(ap)
     args = ap.parse_args()
     dur = 30.0 if args.quick else 120.0
     only = set(args.only.split(",")) if args.only else None
+    scenarios = resolve_scenarios(args)
 
     def want(name: str) -> bool:
         return only is None or name in only
@@ -38,13 +41,13 @@ def main() -> None:
     if want("fig1"):
         fig1_motivation.run()
     if want("fig2"):
-        fig2_task_distribution.run(duration_s=dur)
+        fig2_task_distribution.run(duration_s=dur, scenarios=scenarios)
     if want("fig6"):
-        fig6_aging_effects.run(duration_s=dur)
+        fig6_aging_effects.run(duration_s=dur, scenarios=scenarios)
     if want("fig7"):
-        fig7_carbon.run(duration_s=dur)
+        fig7_carbon.run(duration_s=dur, scenarios=scenarios)
     if want("fig8"):
-        fig8_idle_cores.run(duration_s=dur)
+        fig8_idle_cores.run(duration_s=dur, scenarios=scenarios)
     if want("kern"):
         kernel_micro.run()
     if want("ablations") and not args.quick:

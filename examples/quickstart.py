@@ -1,32 +1,45 @@
 """Quickstart: the paper's aging-aware CPU core management in 60 lines.
 
-Runs one server CPU (40 cores) under a bursty inference load with the
-proposed technique vs the linux baseline, and prints the aging outcome
-plus the embodied-carbon estimate.
+Runs one server CPU (40 cores) under a bursty inference load — drawn
+from the pluggable workload-scenario registry (`repro.workloads`) — with
+the proposed technique vs the linux baseline, and prints the aging
+outcome plus the embodied-carbon estimate.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
 from repro.core import CoreManager, carbon
+from repro.workloads import get_scenario
 
 HOURS = 6
-RATE = 3          # mean concurrent tasks per second
+RATE = 3          # mean requests (-> CPU task bursts) per second
+SCENARIO = "conversation-mmpp"   # try conversation-diurnal, code-poisson...
 
 
 def simulate(policy: str) -> CoreManager:
     mgr = CoreManager(num_cores=40, policy=policy,
                       rng=np.random.default_rng(0), idling_period_s=1.0)
-    rng = np.random.default_rng(1)
-    task_id, t = 0, 0.0
-    while t < HOURS * 3600:
-        # Poisson burst of CPU inference tasks (submit/iteration/memory ops)
-        for _ in range(rng.poisson(RATE)):
-            mgr.assign(task_id, t)
-            mgr.release(task_id, t + rng.uniform(0.005, 0.03))
-            task_id += 1
-        t += 1.0
-        mgr.periodic(t)          # Algorithm 2: Selective Core Idling
+    # One request stream, shared by both policies (seeded): each request
+    # lands on the host CPU as one short inference task. Merge assigns,
+    # releases and periodic ticks into one time-ordered event stream —
+    # the manager requires non-decreasing timestamps.
+    requests = get_scenario(SCENARIO).generate(
+        rate_rps=RATE, duration_s=HOURS * 3600, seed=1)
+    durations = np.random.default_rng(2).uniform(0.005, 0.03,
+                                                 size=len(requests))
+    events = sorted(
+        [(r.arrival_s + durations[tid], 0, tid)         # release
+         for tid, r in enumerate(requests)]
+        + [(r.arrival_s, 1, tid) for tid, r in enumerate(requests)]
+        + [(float(k), 2, -1) for k in range(1, HOURS * 3600 + 1)])
+    for t, kind, tid in events:
+        if kind == 1:
+            mgr.assign(tid, t)
+        elif kind == 0:
+            mgr.release(tid, t)
+        else:
+            mgr.periodic(t)      # Algorithm 2: Selective Core Idling
     mgr.settle_all(HOURS * 3600)
     return mgr
 

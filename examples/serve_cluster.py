@@ -39,15 +39,19 @@ def serve_demo() -> None:
 
 
 def cluster_demo() -> None:
-    print("=== cluster simulation (22 machines, Azure-like trace) ===")
-    res = run_policy_sweep(ExperimentConfig(num_cores=40, rate_rps=60,
-                                            duration_s=60, seed=0))
-    for name, m in res.items():
-        print(f"{name:10s} deg_p99={m.mean_degradation_percentiles[99]:.5f} "
+    print("=== cluster simulation (22 machines, policy x scenario) ===")
+    res = run_policy_sweep(
+        ExperimentConfig(num_cores=40, rate_rps=60, duration_s=60, seed=0),
+        policies=("linux", "least-aged", "proposed"),
+        scenarios=("conversation-poisson", "conversation-mmpp"))
+    for (policy, scenario), m in res.items():
+        print(f"{policy:10s} {scenario:24s} "
+              f"deg_p99={m.mean_degradation_percentiles[99]:.5f} "
               f"idle_p90={m.idle_norm_percentiles[90]:+.3f} "
               f"lat_p99={m.p99_latency_s:.1f}s")
-    est = carbon_comparison(res["linux"], res["proposed"], 99)
-    print(f"\nestimated yearly CPU-embodied carbon reduction (p99): "
+    sc = "conversation-poisson"
+    est = carbon_comparison(res[("linux", sc)], res[("proposed", sc)], 99)
+    print(f"\nestimated yearly CPU-embodied carbon reduction (p99, {sc}): "
           f"{100*est.reduction_frac:.2f}%  (paper: 37.67%)")
 
 

@@ -13,15 +13,14 @@ Public API:
 """
 from repro.core import (aging, carbon, idling, mapping, policies,
                         temperature, variation)
-from repro.core.manager import (OVERSUBSCRIBED, CoreManager, ManagerMetrics,
-                                Policy)
+from repro.core.manager import OVERSUBSCRIBED, CoreManager, ManagerMetrics
 from repro.core.policies import (CorePolicy, CoreView, IdleCorrection,
                                  available_policies, get_policy,
                                  register_policy)
 
 __all__ = [
     "aging", "carbon", "idling", "mapping", "policies", "temperature",
-    "variation", "CoreManager", "ManagerMetrics", "Policy", "OVERSUBSCRIBED",
+    "variation", "CoreManager", "ManagerMetrics", "OVERSUBSCRIBED",
     "CorePolicy", "CoreView", "IdleCorrection", "available_policies",
     "get_policy", "register_policy",
 ]

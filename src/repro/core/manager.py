@@ -16,30 +16,12 @@ change first settles the elapsed interval under the old ADF.
 from __future__ import annotations
 
 import dataclasses
-import enum
-import warnings
 
 import numpy as np
 
 from repro.core import aging, mapping, temperature, variation
-from repro.core.policies import (CorePolicy, CoreView, canonical_policy_name,
-                                 get_policy)
+from repro.core.policies import CorePolicy, CoreView, get_policy
 from repro.core.temperature import CState
-
-
-class Policy(enum.Enum):
-    """Deprecated: the pre-registry fixed policy set.
-
-    Kept as a shim so `CoreManager(n, policy=Policy.PROPOSED)` and
-    friends keep working; new code passes registry names ("proposed",
-    "linux", "least-aged", "round-robin", "aging-greedy", ...) or a
-    `CorePolicy` instance. See `repro.core.policies`.
-    """
-
-    PROPOSED = "proposed"
-    LINUX = "linux"
-    LEAST_AGED = "least-aged"
-
 
 OVERSUBSCRIBED = -1  # sentinel core id for tasks that didn't get a core
 
@@ -60,20 +42,18 @@ class CoreManager:
     def __init__(
         self,
         num_cores: int,
-        policy: CorePolicy | Policy | str = "proposed",
+        policy: CorePolicy | str = "proposed",
         aging_params: aging.AgingParams = aging.DEFAULT_PARAMS,
         variation_params: variation.VariationParams | None = None,
         rng: np.random.Generator | None = None,
         idling_period_s: float = 1.0,
         policy_opts: dict | None = None,
-        linux_stickiness: float | None = None,
     ):
         self.num_cores = num_cores
         self.params = aging_params
         self.idling_period_s = idling_period_s
         self.rng = rng if rng is not None else np.random.default_rng(0)
-        self.policy = self._resolve_policy(policy, policy_opts,
-                                           linux_stickiness)
+        self.policy = self._resolve_policy(policy, policy_opts)
         vp = variation_params or variation.VariationParams(
             f_nominal=aging_params.f_nominal)
         self.f0 = variation.sample_initial_frequencies(vp, num_cores, self.rng)
@@ -95,25 +75,15 @@ class CoreManager:
         self._view = CoreView(self)
 
     @staticmethod
-    def _resolve_policy(policy, policy_opts, linux_stickiness) -> CorePolicy:
+    def _resolve_policy(policy, policy_opts) -> CorePolicy:
         if isinstance(policy, CorePolicy):
-            if policy_opts or linux_stickiness is not None:
-                raise TypeError("policy_opts/linux_stickiness only apply "
-                                "when the policy is given by name; pass them "
-                                "to the constructor of your CorePolicy "
-                                "instance instead")
+            if policy_opts:
+                raise TypeError("policy_opts only applies when the policy "
+                                "is given by name; pass the options to the "
+                                "constructor of your CorePolicy instance "
+                                "instead")
             return policy
-        if isinstance(policy, Policy):
-            warnings.warn(
-                "the Policy enum is deprecated; pass the policy name "
-                f"(policy={policy.value!r}) or a CorePolicy instance",
-                DeprecationWarning, stacklevel=3)
-            policy = policy.value
-        opts = dict(policy_opts or {})
-        if (linux_stickiness is not None
-                and canonical_policy_name(policy) == "linux"):
-            opts.setdefault("stickiness", linux_stickiness)
-        return get_policy(policy, **opts)
+        return get_policy(policy, **dict(policy_opts or {}))
 
     @property
     def policy_name(self) -> str:

@@ -20,9 +20,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import CoreManager, CorePolicy, Policy
+from repro.core import CoreManager, CorePolicy
 from repro.models import Model
-from repro.sim.tasks import CPUTask
+from repro.sim.tasks import TaskIdAllocator
 
 
 @dataclasses.dataclass
@@ -37,7 +37,7 @@ class Request:
 class InferenceEngine:
     def __init__(self, model: Model, params, max_batch: int = 8,
                  max_len: int = 256,
-                 policy: CorePolicy | Policy | str = "proposed",
+                 policy: CorePolicy | str = "proposed",
                  num_host_cores: int = 16,
                  eos_id: int | None = None,
                  clock: Callable[[], float] = time.monotonic,
@@ -60,6 +60,7 @@ class InferenceEngine:
         self._t0 = clock()
         self.core_manager = CoreManager(num_host_cores, policy=policy,
                                         rng=np.random.default_rng(0))
+        self._task_ids = TaskIdAllocator()   # per-engine CPU-task id stream
         self._last_idle_check = 0.0
 
         self.slots: list[Request | None] = [None] * max_batch
@@ -101,7 +102,7 @@ class InferenceEngine:
 
     def _cpu_task(self, name: str) -> None:
         """Account one Table-2 host task against the core manager."""
-        task = CPUTask(name)
+        task = self._task_ids.new(name)
         t = self._now()
         self.core_manager.assign(task.task_id, t)
         self.core_manager.release(task.task_id, t + task.duration_s)

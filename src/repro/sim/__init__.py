@@ -1,16 +1,22 @@
-"""Event-driven LLM inference cluster simulator (extended splitwise-sim)."""
+"""Event-driven LLM inference cluster simulator (extended splitwise-sim).
+
+Workloads come from the pluggable `repro.workloads` scenario registry;
+`Request` is re-exported here for convenience, and `TraceConfig` /
+`generate` / `trace_stats` survive as deprecated shims over it.
+"""
 from repro.sim.cluster import Cluster, Machine, PromptInstance, TokenInstance
 from repro.sim.config import ExperimentConfig
 from repro.sim.events import EventQueue
 from repro.sim.metrics import ExperimentMetrics, carbon_comparison, collect
 from repro.sim.runner import (DEFAULT_SWEEP, run_experiment,
                               run_policy_sweep)
-from repro.sim.tasks import CPUTask, TASK_DURATIONS_S
+from repro.sim.tasks import CPUTask, TASK_DURATIONS_S, TaskIdAllocator
 from repro.sim.trace import Request, TraceConfig, generate, trace_stats
 
 __all__ = [
     "Cluster", "Machine", "PromptInstance", "TokenInstance", "EventQueue",
     "ExperimentConfig", "ExperimentMetrics", "carbon_comparison", "collect",
     "DEFAULT_SWEEP", "run_experiment", "run_policy_sweep", "CPUTask",
-    "TASK_DURATIONS_S", "Request", "TraceConfig", "generate", "trace_stats",
+    "TASK_DURATIONS_S", "TaskIdAllocator", "Request", "TraceConfig",
+    "generate", "trace_stats",
 ]

@@ -22,8 +22,8 @@ import numpy as np
 from repro.core import OVERSUBSCRIBED, CoreManager
 from repro.sim.config import ExperimentConfig
 from repro.sim.events import EventQueue
-from repro.sim.tasks import CPUTask
-from repro.sim.trace import Request
+from repro.sim.tasks import TaskIdAllocator
+from repro.workloads import Request
 
 # ----------------------------- GPU model ------------------------------ #
 PREFILL_BASE_S = 0.030          # fixed prefill overhead (H100, 70B-class)
@@ -49,9 +49,12 @@ class Machine:
     """One inference server: host CPU (CoreManager) + a GPU instance."""
 
     def __init__(self, machine_id: int, cfg: ExperimentConfig,
-                 queue: EventQueue):
+                 queue: EventQueue, task_ids: TaskIdAllocator | None = None):
         self.machine_id = machine_id
         self.queue = queue
+        # Cluster-shared id stream (falls back to a private one so a
+        # Machine can still be built standalone in tests/examples).
+        self.task_ids = task_ids if task_ids is not None else TaskIdAllocator()
         # Each machine instantiates its own policy from the registry name
         # (policies carry per-server state and cannot be shared).
         self.manager = CoreManager(
@@ -66,7 +69,7 @@ class Machine:
     def run_cpu_task(self, name: str, on_done=None) -> None:
         """Spawn a Table-2 CPU task; completion latency reflects core
         aging (degraded frequency) and oversubscription time-sharing."""
-        task = CPUTask(name)
+        task = self.task_ids.new(name)
         now = self.queue.now
         speed = self.manager.assign(task.task_id, now)
         dur = task.duration_s / max(speed, 1e-6)
@@ -189,8 +192,14 @@ class Cluster:
     def __init__(self, cfg: ExperimentConfig):
         self.cfg = cfg
         self.queue = EventQueue()
+        # One id stream per simulation (not per process): concurrent
+        # clusters can't interleave ids, while within this cluster ids
+        # stay globally ordered by spawn time — the property the
+        # manager's oversubscription FIFO relies on.
+        self.task_ids = TaskIdAllocator()
         self.machines = [
-            Machine(i, cfg, self.queue) for i in range(cfg.n_machines)
+            Machine(i, cfg, self.queue, self.task_ids)
+            for i in range(cfg.n_machines)
         ]
         self.prompt_instances = [PromptInstance(m)
                                  for m in self.machines[:cfg.n_prompt]]

@@ -10,8 +10,12 @@ Replaces the positional-kwarg piles previously duplicated across
 
 The policy is addressed by registry name (see `repro.core.policies`);
 `policy_opts` carries constructor options for it (e.g.
-`policy="linux", policy_opts={"stickiness": 0.5}`). The dataclass is
-frozen and hashable, so configs can key caches and result dicts.
+`policy="linux", policy_opts={"stickiness": 0.5}`). The workload is
+likewise addressed by scenario registry name (see `repro.workloads`)
+with `scenario_opts` for its factory (e.g.
+`scenario="conversation-mmpp", scenario_opts={"burst_factor": 8.0}`).
+The dataclass is frozen and hashable, so configs can key caches and
+result dicts.
 """
 from __future__ import annotations
 
@@ -19,6 +23,7 @@ import dataclasses
 from typing import Any, Mapping
 
 from repro.core.policies import canonical_policy_name
+from repro.workloads import canonical_scenario_name
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,7 +39,10 @@ class ExperimentConfig:
     # cluster topology (Splitwise phase-splitting deployment)
     n_prompt: int = 5
     n_token: int = 17
-    # trace (Azure-conversation-like arrival process)
+    # workload (scenario registry name + factory options; the scenario
+    # receives rate_rps / duration_s / seed at generation time)
+    scenario: str = "conversation-poisson"
+    scenario_opts: tuple[tuple[str, Any], ...] = ()
     rate_rps: float = 60.0
     duration_s: float = 120.0
     # bookkeeping
@@ -42,17 +50,19 @@ class ExperimentConfig:
     sample_period_s: float = 0.1
 
     def __post_init__(self):
-        # Normalize: accept the legacy Policy enum, any hyphen/underscore
-        # spelling, and a dict for policy_opts — store canonical + frozen.
-        name = canonical_policy_name(getattr(self.policy, "value",
-                                             self.policy))
-        object.__setattr__(self, "policy", name)
-        opts = self.policy_opts
-        if isinstance(opts, Mapping):
-            opts = opts.items()
-        # Always sorted, so equal logical opts hash equally regardless of
-        # the order (or form) they were supplied in.
-        object.__setattr__(self, "policy_opts", tuple(sorted(opts)))
+        # Normalize: accept any hyphen/underscore spelling for registry
+        # names and a dict for opts — store canonical + frozen. Always
+        # sorted, so equal logical opts hash equally regardless of the
+        # order (or form) they were supplied in.
+        object.__setattr__(self, "policy",
+                           canonical_policy_name(self.policy))
+        object.__setattr__(self, "scenario",
+                           canonical_scenario_name(self.scenario))
+        for field in ("policy_opts", "scenario_opts"):
+            opts = getattr(self, field)
+            if isinstance(opts, Mapping):
+                opts = opts.items()
+            object.__setattr__(self, field, tuple(sorted(opts)))
         if self.num_cores < 1:
             raise ValueError(f"num_cores must be >= 1, got {self.num_cores}")
         if self.n_prompt < 1 or self.n_token < 1:
@@ -68,6 +78,11 @@ class ExperimentConfig:
         """`policy_opts` as a plain kwargs dict."""
         return dict(self.policy_opts)
 
+    @property
+    def scenario_options(self) -> dict[str, Any]:
+        """`scenario_opts` as a plain kwargs dict."""
+        return dict(self.scenario_opts)
+
     def replace(self, **changes) -> "ExperimentConfig":
         """Frozen-friendly copy-with-overrides."""
         return dataclasses.replace(self, **changes)
@@ -78,3 +93,10 @@ class ExperimentConfig:
         return dataclasses.replace(self, policy=policy,
                                    policy_opts=tuple(sorted(
                                        policy_opts.items())))
+
+    def with_scenario(self, scenario: str,
+                      **scenario_opts) -> "ExperimentConfig":
+        """Same experiment, different workload (opts reset unless given)."""
+        return dataclasses.replace(self, scenario=scenario,
+                                   scenario_opts=tuple(sorted(
+                                       scenario_opts.items())))

@@ -16,6 +16,7 @@ class ExperimentMetrics:
     policy: str
     num_cores: int
     rate_rps: float
+    scenario: str
     # paper Fig. 6: CV of per-server core-frequency distribution, and mean
     # frequency degradation, percentiled across the cluster's machines.
     freq_cv_percentiles: dict
@@ -38,7 +39,8 @@ class ExperimentMetrics:
 
 
 def collect(cluster: Cluster, policy: str, num_cores: int,
-            rate_rps: float) -> ExperimentMetrics:
+            rate_rps: float,
+            scenario: str = "conversation-poisson") -> ExperimentMetrics:
     cvs, degs, idle_all = [], [], []
     task_samples = []
     for m in cluster.machines:
@@ -62,6 +64,7 @@ def collect(cluster: Cluster, policy: str, num_cores: int,
         policy=policy,
         num_cores=num_cores,
         rate_rps=rate_rps,
+        scenario=scenario,
         freq_cv_percentiles=pct(cvs),
         mean_degradation_percentiles=pct(degs),
         idle_norm_percentiles=pct(idle_all),

@@ -1,70 +1,76 @@
-"""Experiment runner: replay a trace against a cluster under a policy.
+"""Experiment runner: replay a workload scenario against a cluster
+under a policy.
 
-Canonical API (PR 1): build a frozen `ExperimentConfig` and pass it to
-`run_experiment` / `run_policy_sweep`. The pre-registry signature
-(`run_experiment(Policy.PROPOSED, num_cores=..., ...)`) still works as a
-deprecated shim.
+Build a frozen `ExperimentConfig` and pass it to `run_experiment`; the
+workload comes from the `repro.workloads` scenario registry
+(`cfg.scenario` + `cfg.scenario_opts`), the policy from the
+`repro.core.policies` registry. `run_policy_sweep` runs the same
+experiment across policies, and — with `scenarios=` — across full
+policy x scenario grids:
+
+    sweep = run_policy_sweep(cfg, policies=("linux", "proposed"),
+                             scenarios=("conversation-poisson",
+                                        "conversation-mmpp"))
+    sweep[("proposed", "conversation-mmpp")].p99_latency_s
 """
 from __future__ import annotations
 
-import warnings
-
-from repro.core.manager import Policy
 from repro.core.policies import canonical_policy_name
 from repro.sim import metrics as metrics_mod
 from repro.sim.cluster import Cluster
 from repro.sim.config import ExperimentConfig
-from repro.sim.tasks import reset_task_ids
-from repro.sim.trace import TraceConfig, generate
+from repro.workloads import canonical_scenario_name, get_scenario
 
 DEFAULT_SWEEP = ("linux", "least-aged", "proposed")
 
 
-def _coerce_config(cfg, legacy_kw) -> ExperimentConfig:
-    if isinstance(cfg, ExperimentConfig):
-        if legacy_kw:
-            raise TypeError("pass experiment parameters inside the "
-                            f"ExperimentConfig, not as kwargs: {legacy_kw}")
-        return cfg
-    # Legacy shim: first argument was a Policy enum (or name string).
-    warnings.warn(
-        "run_experiment(policy, **kwargs) is deprecated; pass an "
-        "ExperimentConfig instead", DeprecationWarning, stacklevel=3)
-    name = getattr(cfg, "value", cfg)
-    return ExperimentConfig(policy=name, **legacy_kw)
-
-
-def run_experiment(cfg: ExperimentConfig | Policy | str,
-                   **legacy_kw) -> metrics_mod.ExperimentMetrics:
-    cfg = _coerce_config(cfg, legacy_kw)
-    reset_task_ids()
-    trace = generate(TraceConfig(rate_rps=cfg.rate_rps,
-                                 duration_s=cfg.duration_s, seed=cfg.seed))
+def run_experiment(cfg: ExperimentConfig) -> metrics_mod.ExperimentMetrics:
+    if not isinstance(cfg, ExperimentConfig):
+        raise TypeError(
+            "run_experiment takes an ExperimentConfig (the pre-registry "
+            "run_experiment(policy, **kwargs) signature was removed); "
+            f"got {cfg!r}")
+    scenario = get_scenario(cfg.scenario, **cfg.scenario_options)
+    trace = scenario.generate(rate_rps=cfg.rate_rps,
+                              duration_s=cfg.duration_s, seed=cfg.seed)
     cluster = Cluster(cfg)
     cluster.run(trace, cfg.duration_s, sample_period_s=cfg.sample_period_s)
     return metrics_mod.collect(cluster, cfg.policy, cfg.num_cores,
-                               cfg.rate_rps)
+                               cfg.rate_rps, scenario=cfg.scenario)
 
 
 def run_policy_sweep(
     cfg: ExperimentConfig | None = None,
     policies=DEFAULT_SWEEP,
-    **legacy_kw,
-) -> dict[str, metrics_mod.ExperimentMetrics]:
-    """Run the same experiment under each policy, keyed by registry name.
+    scenarios=None,
+) -> dict:
+    """Run the same experiment under each policy (and scenario).
 
-    Policies are given by string name (any registered policy works — no
-    enum import needed); `cfg.policy_opts` only apply to the sweep entry
-    matching `cfg.policy`.
+    Policies/scenarios are given by registry name. With `scenarios=None`
+    (default) the result is keyed by policy name and the workload is
+    `cfg.scenario`, preserving the single-workload API. With an iterable
+    of scenario names, the result is keyed by `(policy, scenario)`
+    tuples. `cfg.policy_opts` / `cfg.scenario_opts` only apply to the
+    sweep entries matching `cfg.policy` / `cfg.scenario`.
     """
     if cfg is None:
-        cfg = ExperimentConfig(**legacy_kw)
-    elif legacy_kw:
-        raise TypeError("pass experiment parameters inside the "
-                        f"ExperimentConfig, not as kwargs: {legacy_kw}")
+        cfg = ExperimentConfig()
+    if scenarios is None:
+        out = {}
+        for p in policies:
+            run_cfg = _with_policy(cfg, p)
+            out[run_cfg.policy] = run_experiment(run_cfg)
+        return out
     out = {}
-    for p in policies:
-        name = canonical_policy_name(getattr(p, "value", p))
-        run_cfg = cfg if name == cfg.policy else cfg.with_policy(name)
-        out[run_cfg.policy] = run_experiment(run_cfg)
+    for s in scenarios:
+        s_name = canonical_scenario_name(s)
+        s_cfg = cfg if s_name == cfg.scenario else cfg.with_scenario(s_name)
+        for p in policies:
+            run_cfg = _with_policy(s_cfg, p)
+            out[(run_cfg.policy, s_name)] = run_experiment(run_cfg)
     return out
+
+
+def _with_policy(cfg: ExperimentConfig, policy) -> ExperimentConfig:
+    name = canonical_policy_name(policy)
+    return cfg if name == cfg.policy else cfg.with_policy(name)

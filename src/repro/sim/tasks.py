@@ -10,7 +10,6 @@ paths are the longest; bookkeeping completions are the shortest).
 from __future__ import annotations
 
 import dataclasses
-import itertools
 
 # Table 2 task types -> nominal duration (seconds) on an unaged core.
 # Millisecond-scale host work for a production serving stack; the
@@ -29,19 +28,35 @@ TASK_DURATIONS_S: dict[str, float] = {
     "flow_completion": 0.005,   # Link.flow_completion (KV-cache transfer)
 }
 
-_ids = itertools.count()
-
-
 @dataclasses.dataclass
 class CPUTask:
     name: str
-    task_id: int = dataclasses.field(default_factory=lambda: next(_ids))
+    task_id: int
 
     @property
     def duration_s(self) -> float:
         return TASK_DURATIONS_S[self.name]
 
 
-def reset_task_ids() -> None:
-    global _ids
-    _ids = itertools.count()
+class TaskIdAllocator:
+    """Per-simulation monotonically increasing CPU-task ids.
+
+    Replaces the old module-global `itertools.count()` +
+    `reset_task_ids()` pattern: each `Cluster` / `InferenceEngine` owns
+    its own allocator, so concurrently running experiments can never
+    interleave ids (the manager's oversubscription FIFO orders waiting
+    tasks by id, which requires ids to be per-simulation monotone).
+    """
+
+    __slots__ = ("_next",)
+
+    def __init__(self) -> None:
+        self._next = 0
+
+    def next_id(self) -> int:
+        tid = self._next
+        self._next += 1
+        return tid
+
+    def new(self, name: str) -> CPUTask:
+        return CPUTask(name, self.next_id())

@@ -1,30 +1,40 @@
-"""Azure-production-like LLM inference trace synthesis (paper §6.1.2).
+"""Deprecated shim over `repro.workloads` (PR 2).
 
-The paper replays Microsoft's published Azure LLM inference traces, which
-characterize each request by (arrival time, input tokens, output tokens).
-Those traces are not shipped offline, so we synthesize statistically
-matching traces using the published Splitwise [26] characterization of the
-Azure *conversation* workload: heavy-tailed token counts with
-median input ~1020 / mean ~1155, and mean output ~211 tokens, Poisson
-arrivals at a configurable cluster request rate. Deterministic per seed.
+The single synthetic Azure-conversation generator that used to live here
+is now the `conversation-poisson` scenario in the pluggable
+`repro.workloads` subsystem, which adds diurnal/bursty/flash-crowd
+arrival processes, code/long-context/blended token mixes, and Azure-CSV
+trace ingestion & replay. New code should do:
+
+    from repro.workloads import get_scenario
+    trace = get_scenario("conversation-poisson").generate(
+        rate_rps=60.0, duration_s=120.0, seed=0)
+
+`TraceConfig` / `generate` keep working (bit-exactly — same RNG draw
+sequence) by resolving to that scenario, and will be removed once
+nothing imports them.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
-import numpy as np
+from repro.workloads import Request, request_stats
+from repro.workloads.arrivals import PoissonArrivals
+from repro.workloads.mixes import LognormalMix
+from repro.workloads.scenario import Scenario
 
-
-@dataclasses.dataclass(frozen=True)
-class Request:
-    req_id: int
-    arrival_s: float
-    input_tokens: int
-    output_tokens: int
+__all__ = ["Request", "TraceConfig", "generate", "trace_stats"]
 
 
 @dataclasses.dataclass(frozen=True)
 class TraceConfig:
+    """Deprecated: parameters of the old built-in conversation trace.
+
+    Equivalent to `ExperimentConfig(scenario="conversation-poisson")`
+    with a custom `LognormalMix` when the token fits are overridden.
+    """
+
     rate_rps: float = 60.0          # cluster-wide request rate
     duration_s: float = 120.0
     # lognormal fits to the Splitwise Azure-conversation characterization
@@ -36,32 +46,37 @@ class TraceConfig:
     output_max: int = 2048
     seed: int = 0
 
+    def as_scenario(self) -> Scenario:
+        """The workloads-subsystem scenario this config resolves to."""
+        mix = LognormalMix(
+            input_logmean=self.input_logmean,
+            input_logstd=self.input_logstd,
+            output_logmean=self.output_logmean,
+            output_logstd=self.output_logstd,
+            input_max=self.input_max, output_max=self.output_max)
+        return Scenario("conversation-poisson", mix,
+                        lambda rate, dur: PoissonArrivals(rate))
+
 
 def generate(cfg: TraceConfig) -> list[Request]:
-    rng = np.random.default_rng(cfg.seed)
-    requests: list[Request] = []
-    t = 0.0
-    rid = 0
-    while True:
-        t += rng.exponential(1.0 / cfg.rate_rps)
-        if t >= cfg.duration_s:
-            break
-        n_in = int(np.clip(rng.lognormal(cfg.input_logmean, cfg.input_logstd),
-                           8, cfg.input_max))
-        n_out = int(np.clip(rng.lognormal(cfg.output_logmean, cfg.output_logstd),
-                            1, cfg.output_max))
-        requests.append(Request(rid, t, n_in, n_out))
-        rid += 1
-    return requests
+    warnings.warn(
+        "sim.trace.generate(TraceConfig) is deprecated; use "
+        "repro.workloads.get_scenario('conversation-poisson').generate()",
+        DeprecationWarning, stacklevel=2)
+    return cfg.as_scenario().generate(rate_rps=cfg.rate_rps,
+                                      duration_s=cfg.duration_s,
+                                      seed=cfg.seed)
+
+
+_LEGACY_STAT_KEYS = ("n_requests", "input_median", "input_mean",
+                     "output_mean", "output_median")
 
 
 def trace_stats(requests: list[Request]) -> dict:
-    n_in = np.array([r.input_tokens for r in requests])
-    n_out = np.array([r.output_tokens for r in requests])
-    return {
-        "n_requests": len(requests),
-        "input_median": float(np.median(n_in)),
-        "input_mean": float(n_in.mean()),
-        "output_mean": float(n_out.mean()),
-        "output_median": float(np.median(n_out)),
-    }
+    """Deprecated alias of `repro.workloads.request_stats` (which also
+    handles empty streams without NaN). Returns the legacy key set."""
+    warnings.warn(
+        "sim.trace.trace_stats is deprecated; use "
+        "repro.workloads.request_stats", DeprecationWarning, stacklevel=2)
+    stats = request_stats(requests)
+    return {k: stats[k] for k in _LEGACY_STAT_KEYS}

@@ -1,0 +1,64 @@
+"""String-keyed registry of workload scenarios (mirrors
+`repro.core.policies.registry`).
+
+    @register_scenario("conversation-poisson")
+    def conversation_poisson() -> Scenario: ...
+
+    sc = get_scenario("conversation-poisson")       # fresh scenario
+    sc = get_scenario("conversation-mmpp", burst_factor=8.0)
+
+Names are case-insensitive and underscore/hyphen-insensitive. Factories
+(not instances) are registered so every `get_scenario` call can take
+constructor options and returns an independent scenario object.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.workloads.base import WorkloadScenario
+
+_REGISTRY: dict[str, Callable[..., WorkloadScenario]] = {}
+
+
+def canonical_scenario_name(name: str) -> str:
+    """Normalize a user-supplied scenario key ("Conv_Poisson" style)."""
+    return str(name).strip().lower().replace("_", "-")
+
+
+def register_scenario(name: str):
+    """Decorator: register a factory returning a `WorkloadScenario`."""
+    key = canonical_scenario_name(name)
+
+    def deco(factory: Callable[..., WorkloadScenario]):
+        if not callable(factory):
+            raise TypeError(f"@register_scenario({name!r}) expects a "
+                            f"callable factory, got {factory!r}")
+        prev = _REGISTRY.get(key)
+        if prev is not None and prev is not factory:
+            raise ValueError(f"scenario name {key!r} already registered "
+                             f"to {getattr(prev, '__name__', prev)!r}")
+        _REGISTRY[key] = factory
+        return factory
+
+    return deco
+
+
+def get_scenario(name: str, **opts) -> WorkloadScenario:
+    """Build the scenario registered under `name` with `opts`."""
+    key = canonical_scenario_name(name)
+    try:
+        factory = _REGISTRY[key]
+    except KeyError:
+        raise KeyError(
+            f"unknown workload scenario {name!r}; available: "
+            f"{', '.join(available_scenarios())}") from None
+    scenario = factory(**opts)
+    if not isinstance(scenario, WorkloadScenario):
+        raise TypeError(f"scenario factory for {key!r} returned "
+                        f"{scenario!r}, which lacks generate()/name")
+    return scenario
+
+
+def available_scenarios() -> tuple[str, ...]:
+    """Sorted canonical names of every registered scenario."""
+    return tuple(sorted(_REGISTRY))

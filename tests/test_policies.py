@@ -11,7 +11,7 @@ import dataclasses
 import numpy as np
 import pytest
 
-from repro.core import (CoreManager, CorePolicy, OVERSUBSCRIBED, Policy,
+from repro.core import (CoreManager, CorePolicy, OVERSUBSCRIBED,
                         available_policies, get_policy, register_policy)
 from repro.core.manager import _adf_unscaled_cached
 from repro.core.aging import AgingParams, solve_k
@@ -140,11 +140,15 @@ class TestCoreViewIsolation:
         np.testing.assert_array_equal(m.idle_history, hist)
 
     def test_instance_plus_name_only_kwargs_rejected(self):
-        with pytest.raises(TypeError, match="linux_stickiness"):
-            CoreManager(4, policy=get_policy("linux"), linux_stickiness=0.7)
         with pytest.raises(TypeError, match="policy_opts"):
             CoreManager(4, policy=get_policy("linux"),
                         policy_opts={"stickiness": 0.7})
+
+    def test_legacy_linux_stickiness_kwarg_removed(self):
+        """The PR-1 compatibility kwarg is gone; options travel via
+        policy_opts only."""
+        with pytest.raises(TypeError):
+            CoreManager(4, policy="linux", linux_stickiness=0.7)
 
     def test_dvth_now_settles_without_mutation(self):
         m = CoreManager(4, policy="linux", rng=np.random.default_rng(0))
@@ -227,9 +231,9 @@ class TestEquivalenceWithPreRefactor:
             gold["mean_latency_s"], abs=1e-9)
         assert m.completed == gold["completed"]
 
-    def test_enum_construction_matches_string(self):
+    def test_spelling_construction_matches_canonical(self):
         runs = {}
-        for pol in ("proposed", Policy.PROPOSED):
+        for pol in ("proposed", "PROPOSED"):
             m = CoreManager(8, policy=pol, rng=np.random.default_rng(3))
             for t in range(30):
                 m.assign(t, float(t))
@@ -290,9 +294,11 @@ class TestExperimentConfig:
         b = ExperimentConfig(policy_opts={"a": 1, "b": 2})
         assert a == b and hash(a) == hash(b)
 
-    def test_normalizes_enum_and_spelling(self):
-        assert ExperimentConfig(policy=Policy.LEAST_AGED).policy == "least-aged"
+    def test_normalizes_spelling(self):
+        assert ExperimentConfig(policy="Least_Aged").policy == "least-aged"
         assert ExperimentConfig(policy="Round_Robin").policy == "round-robin"
+        assert (ExperimentConfig(scenario="Conversation_MMPP").scenario
+                == "conversation-mmpp")
 
     def test_validation(self):
         with pytest.raises(ValueError):

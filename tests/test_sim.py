@@ -2,7 +2,6 @@
 import numpy as np
 import pytest
 
-from repro.core import Policy
 from repro.sim import (EventQueue, ExperimentConfig, TraceConfig,
                        carbon_comparison, generate, run_experiment,
                        run_policy_sweep, trace_stats)
@@ -122,13 +121,17 @@ class TestClusterEndToEnd:
         assert a.freq_cv_percentiles == b.freq_cv_percentiles
         assert a.completed == b.completed
 
-    def test_legacy_enum_shim_matches_config_api(self):
-        """The deprecated run_experiment(Policy, **kw) signature must
-        produce the same metrics as the ExperimentConfig path."""
+    def test_legacy_signature_removed(self):
+        """The pre-registry run_experiment(policy, **kw) shim is gone;
+        a clear TypeError points at ExperimentConfig."""
+        with pytest.raises(TypeError, match="ExperimentConfig"):
+            run_experiment("proposed")
+
+    def test_legacy_trace_shim_matches_scenario(self):
+        """The deprecated TraceConfig path must resolve to the
+        conversation-poisson scenario bit-exactly."""
+        from repro.workloads import get_scenario
         with pytest.deprecated_call():
-            a = run_experiment(Policy.PROPOSED, rate_rps=40, duration_s=10,
-                               seed=5)
-        b = run_experiment(ExperimentConfig(policy="proposed", rate_rps=40,
-                                            duration_s=10, seed=5))
-        assert a.freq_cv_percentiles == b.freq_cv_percentiles
-        assert a.completed == b.completed
+            legacy = generate(TraceConfig(rate_rps=40, duration_s=20, seed=5))
+        assert legacy == get_scenario("conversation-poisson").generate(
+            rate_rps=40, duration_s=20, seed=5)

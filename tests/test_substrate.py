@@ -162,12 +162,11 @@ class TestEngine:
         return cfg, model, params
 
     def test_serves_batched_requests(self, setup):
-        from repro.core import Policy
         from repro.serving.engine import InferenceEngine
         cfg, model, params = setup
         fake = [0.0]
         eng = InferenceEngine(model, params, max_batch=4, max_len=48,
-                              policy=Policy.PROPOSED, num_host_cores=8,
+                              policy="proposed", num_host_cores=8,
                               clock=lambda: fake[0])
         rng = np.random.default_rng(0)
         ids = [eng.submit(rng.integers(0, 999, 8).tolist(), 5)
@@ -185,7 +184,6 @@ class TestEngine:
     def test_engine_matches_sequential_decode(self, setup):
         """Continuous batching must produce the same tokens as dedicated
         single-request decoding (greedy)."""
-        from repro.core import Policy
         from repro.serving.engine import InferenceEngine
         cfg, model, params = setup
         rng = np.random.default_rng(1)
@@ -207,7 +205,7 @@ class TestEngine:
             want.append(out)
 
         eng = InferenceEngine(model, params, max_batch=4, max_len=32,
-                              policy=Policy.LINUX, num_host_cores=4)
+                              policy="linux", num_host_cores=4)
         for p in prompts:
             eng.submit(p, max_new_tokens=4)
         eng.run_until_drained()
@@ -216,7 +214,7 @@ class TestEngine:
         # (requests complete in submission order here)
         # We reconstruct by re-submitting and recording step outputs:
         eng2 = InferenceEngine(model, params, max_batch=4, max_len=32,
-                               policy=Policy.LINUX, num_host_cores=4)
+                               policy="linux", num_host_cores=4)
         reqs = [eng2.submit(p, max_new_tokens=4) for p in prompts]
         outputs = {r: [] for r in reqs}
         for _ in range(50):
