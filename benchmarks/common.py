@@ -1,5 +1,5 @@
 """Shared benchmark helpers: CSV emission, experiment cache, and the
---scenario CLI axis shared by fig2/fig6/fig8."""
+--scenario / --router CLI axes shared by fig2/fig6/fig7/fig8."""
 from __future__ import annotations
 
 import argparse
@@ -9,6 +9,7 @@ import time
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments")
 DEFAULT_SCENARIOS = ("conversation-poisson",)
+DEFAULT_ROUTERS = ("jsq",)
 
 
 def add_scenario_arg(parser: argparse.ArgumentParser) -> None:
@@ -20,8 +21,21 @@ def add_scenario_arg(parser: argparse.ArgumentParser) -> None:
         "repro.workloads.available_scenarios()")
 
 
+def add_router_arg(parser: argparse.ArgumentParser) -> None:
+    parser.add_argument(
+        "--router", action="append", default=None, metavar="NAME",
+        help="cluster-level request router for the trace-driven figures "
+        f"(fig6/fig7/fig8); repeatable; default {DEFAULT_ROUTERS[0]}. See "
+        "repro.sim.available_routers()")
+
+
 def resolve_scenarios(args: argparse.Namespace) -> tuple[str, ...]:
     return tuple(args.scenario) if args.scenario else DEFAULT_SCENARIOS
+
+
+def resolve_routers(args: argparse.Namespace) -> tuple[str, ...]:
+    return tuple(args.router) if getattr(args, "router", None) \
+        else DEFAULT_ROUTERS
 
 
 def parse_scenarios(description: str | None = None) -> tuple[str, ...]:
@@ -29,6 +43,16 @@ def parse_scenarios(description: str | None = None) -> tuple[str, ...]:
     ap = argparse.ArgumentParser(description=description)
     add_scenario_arg(ap)
     return resolve_scenarios(ap.parse_args())
+
+
+def parse_axes(description: str | None = None) -> tuple[tuple[str, ...],
+                                                        tuple[str, ...]]:
+    """argparse for drivers that sweep both scenarios and routers."""
+    ap = argparse.ArgumentParser(description=description)
+    add_scenario_arg(ap)
+    add_router_arg(ap)
+    args = ap.parse_args()
+    return resolve_scenarios(args), resolve_routers(args)
 
 
 def emit(name: str, rows: list[dict]) -> None:

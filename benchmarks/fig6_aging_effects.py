@@ -8,54 +8,62 @@ normalized performance plots.
 the robustness question the paper can't answer — does the proposed
 policy's aging win survive bursty (conversation-mmpp) or diurnal load? —
 falls out of the same rows, normalized against linux *per scenario*.
+`--router` (repeatable) adds the cluster-routing axis the same way,
+normalized against linux per (scenario, router).
 """
 from __future__ import annotations
 
 from repro.sim import DEFAULT_SWEEP, ExperimentConfig, run_policy_sweep
 
-from benchmarks.common import DEFAULT_SCENARIOS, emit, parse_scenarios
+from benchmarks.common import (DEFAULT_ROUTERS, DEFAULT_SCENARIOS, emit,
+                               parse_axes)
 
 
 def run(duration_s: float = 120.0, rates=(40, 70, 100),
         core_counts=(40, 80), policies=DEFAULT_SWEEP,
-        scenarios=DEFAULT_SCENARIOS) -> list[dict]:
+        scenarios=DEFAULT_SCENARIOS, routers=DEFAULT_ROUTERS) -> list[dict]:
     rows = []
     for scenario in scenarios:
-        for cores in core_counts:
-            for rate in rates:
-                res = run_policy_sweep(
-                    ExperimentConfig(num_cores=cores, rate_rps=rate,
-                                     duration_s=duration_s, seed=1,
-                                     scenario=scenario),
-                    policies=policies)
-                linux = res["linux"]
-                for name, m in res.items():
-                    rows.append({
-                        "scenario": m.scenario,
-                        "cores": cores,
-                        "rate_rps": rate,
-                        "policy": name,
-                        "cv_p50": round(m.freq_cv_percentiles[50], 6),
-                        "cv_p99": round(m.freq_cv_percentiles[99], 6),
-                        "deg_p50": round(
-                            m.mean_degradation_percentiles[50], 6),
-                        "deg_p99": round(
-                            m.mean_degradation_percentiles[99], 6),
-                        "cv_perf_p50": round(
-                            linux.freq_cv_percentiles[50]
-                            / max(m.freq_cv_percentiles[50], 1e-12), 4),
-                        "freq_perf_p50": round(
-                            linux.mean_degradation_percentiles[50]
-                            / max(m.mean_degradation_percentiles[50],
-                                  1e-12), 4),
-                        "freq_perf_p99": round(
-                            linux.mean_degradation_percentiles[99]
-                            / max(m.mean_degradation_percentiles[99],
-                                  1e-12), 4),
-                    })
+        for router in routers:
+            for cores in core_counts:
+                for rate in rates:
+                    res = run_policy_sweep(
+                        ExperimentConfig(num_cores=cores, rate_rps=rate,
+                                         duration_s=duration_s, seed=1,
+                                         scenario=scenario, router=router),
+                        policies=policies)
+                    linux = res["linux"]
+                    for name, m in res.items():
+                        rows.append({
+                            "scenario": m.scenario,
+                            "router": m.router,
+                            "cores": cores,
+                            "rate_rps": rate,
+                            "policy": name,
+                            "cv_p50": round(m.freq_cv_percentiles[50], 6),
+                            "cv_p99": round(m.freq_cv_percentiles[99], 6),
+                            "deg_p50": round(
+                                m.mean_degradation_percentiles[50], 6),
+                            "deg_p99": round(
+                                m.mean_degradation_percentiles[99], 6),
+                            "fleet_deg_cv": round(
+                                m.fleet_degradation_cv, 6),
+                            "cv_perf_p50": round(
+                                linux.freq_cv_percentiles[50]
+                                / max(m.freq_cv_percentiles[50], 1e-12), 4),
+                            "freq_perf_p50": round(
+                                linux.mean_degradation_percentiles[50]
+                                / max(m.mean_degradation_percentiles[50],
+                                      1e-12), 4),
+                            "freq_perf_p99": round(
+                                linux.mean_degradation_percentiles[99]
+                                / max(m.mean_degradation_percentiles[99],
+                                      1e-12), 4),
+                        })
     emit("fig6_aging_effects", rows)
     return rows
 
 
 if __name__ == "__main__":
-    run(scenarios=parse_scenarios(__doc__))
+    scenarios, routers = parse_axes(__doc__)
+    run(scenarios=scenarios, routers=routers)

@@ -5,44 +5,55 @@ performance). Paper headline: 37.67% @ p99, 49.01% @ p50.
 `--scenario` (repeatable) recomputes the carbon estimate under any
 registered workload scenario — the headline number's robustness to
 temporal demand shape (EcoServe's central question) in one sweep.
+`--router` (repeatable) does the same on the cluster-routing axis and
+additionally reports the per-run fleet yearly total aggregated from
+per-machine `CarbonEstimate`s.
 """
 from __future__ import annotations
 
 from repro.core.carbon import CPU_EMBODIED_KGCO2EQ, BASELINE_LIFESPAN_YEARS
 from repro.sim import ExperimentConfig, carbon_comparison, run_policy_sweep
 
-from benchmarks.common import DEFAULT_SCENARIOS, emit, parse_scenarios
+from benchmarks.common import (DEFAULT_ROUTERS, DEFAULT_SCENARIOS, emit,
+                               parse_axes)
 
 N_MACHINES = 22
 
 
 def run(duration_s: float = 120.0, rates=(40, 70, 100),
-        scenarios=DEFAULT_SCENARIOS) -> list[dict]:
+        scenarios=DEFAULT_SCENARIOS, routers=DEFAULT_ROUTERS) -> list[dict]:
     rows = []
     for scenario in scenarios:
-        for rate in rates:
-            res = run_policy_sweep(ExperimentConfig(
-                num_cores=40, rate_rps=rate, duration_s=duration_s,
-                seed=1, scenario=scenario))
-            base_yearly = (N_MACHINES * CPU_EMBODIED_KGCO2EQ
-                           / BASELINE_LIFESPAN_YEARS)
-            for tech in ("least-aged", "proposed"):
-                for pct in (99, 50):
-                    est = carbon_comparison(res["linux"], res[tech], pct)
-                    rows.append({
-                        "scenario": res[tech].scenario,
-                        "rate_rps": rate,
-                        "policy": tech,
-                        "percentile": pct,
-                        "lifetime_extension": round(est.extension_factor, 4),
-                        "cluster_yearly_kgco2eq": round(
-                            N_MACHINES * est.yearly_kgco2eq, 2),
-                        "cluster_baseline_kgco2eq": round(base_yearly, 2),
-                        "reduction_pct": round(100 * est.reduction_frac, 2),
-                    })
+        for router in routers:
+            for rate in rates:
+                res = run_policy_sweep(ExperimentConfig(
+                    num_cores=40, rate_rps=rate, duration_s=duration_s,
+                    seed=1, scenario=scenario, router=router))
+                base_yearly = (N_MACHINES * CPU_EMBODIED_KGCO2EQ
+                               / BASELINE_LIFESPAN_YEARS)
+                for tech in ("least-aged", "proposed"):
+                    for pct in (99, 50):
+                        est = carbon_comparison(res["linux"], res[tech], pct)
+                        rows.append({
+                            "scenario": res[tech].scenario,
+                            "router": res[tech].router,
+                            "rate_rps": rate,
+                            "policy": tech,
+                            "percentile": pct,
+                            "lifetime_extension": round(
+                                est.extension_factor, 4),
+                            "cluster_yearly_kgco2eq": round(
+                                N_MACHINES * est.yearly_kgco2eq, 2),
+                            "cluster_baseline_kgco2eq": round(base_yearly, 2),
+                            "reduction_pct": round(
+                                100 * est.reduction_frac, 2),
+                            "fleet_yearly_kgco2eq": round(
+                                res[tech].fleet_yearly_kgco2eq, 2),
+                        })
     emit("fig7_carbon", rows)
     return rows
 
 
 if __name__ == "__main__":
-    run(scenarios=parse_scenarios(__doc__))
+    scenarios, routers = parse_axes(__doc__)
+    run(scenarios=scenarios, routers=routers)

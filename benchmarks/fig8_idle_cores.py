@@ -6,45 +6,52 @@ oversubscription above -0.1 at p1.
 `--scenario` (repeatable) runs the same policy sweep under additional
 workload scenarios — flash crowds and MMPP bursts are exactly the loads
 that stress the oversubscription guarantee (idle_p1 >= -0.1).
+`--router` (repeatable) adds the cluster-routing axis: aging-aware
+routing must not trade the idle-core guarantee away.
 """
 from __future__ import annotations
 
 from repro.sim import DEFAULT_SWEEP, ExperimentConfig, run_policy_sweep
 
-from benchmarks.common import DEFAULT_SCENARIOS, emit, parse_scenarios
+from benchmarks.common import (DEFAULT_ROUTERS, DEFAULT_SCENARIOS, emit,
+                               parse_axes)
 
 
 def run(duration_s: float = 120.0, rates=(40, 100),
         core_counts=(40, 80), policies=DEFAULT_SWEEP,
-        scenarios=DEFAULT_SCENARIOS) -> list[dict]:
+        scenarios=DEFAULT_SCENARIOS, routers=DEFAULT_ROUTERS) -> list[dict]:
     rows = []
     for scenario in scenarios:
-        for cores in core_counts:
-            for rate in rates:
-                res = run_policy_sweep(
-                    ExperimentConfig(num_cores=cores, rate_rps=rate,
-                                     duration_s=duration_s, seed=1,
-                                     scenario=scenario),
-                    policies=policies)
-                p90_linux = res["linux"].idle_norm_percentiles[90]
-                for name, m in res.items():
-                    pct = m.idle_norm_percentiles
-                    rows.append({
-                        "scenario": m.scenario,
-                        "cores": cores,
-                        "rate_rps": rate,
-                        "policy": name,
-                        "idle_p1": round(pct[1], 4),
-                        "idle_p50": round(pct[50], 4),
-                        "idle_p90": round(pct[90], 4),
-                        "underutil_reduction_vs_linux_pct": round(
-                            100 * (1 - pct[90] / max(p90_linux, 1e-9)), 2),
-                        "oversub_below_10pct": bool(pct[1] >= -0.1),
-                        "p99_latency_s": round(m.p99_latency_s, 2),
-                    })
+        for router in routers:
+            for cores in core_counts:
+                for rate in rates:
+                    res = run_policy_sweep(
+                        ExperimentConfig(num_cores=cores, rate_rps=rate,
+                                         duration_s=duration_s, seed=1,
+                                         scenario=scenario, router=router),
+                        policies=policies)
+                    p90_linux = res["linux"].idle_norm_percentiles[90]
+                    for name, m in res.items():
+                        pct = m.idle_norm_percentiles
+                        rows.append({
+                            "scenario": m.scenario,
+                            "router": m.router,
+                            "cores": cores,
+                            "rate_rps": rate,
+                            "policy": name,
+                            "idle_p1": round(pct[1], 4),
+                            "idle_p50": round(pct[50], 4),
+                            "idle_p90": round(pct[90], 4),
+                            "underutil_reduction_vs_linux_pct": round(
+                                100 * (1 - pct[90] / max(p90_linux, 1e-9)),
+                                2),
+                            "oversub_below_10pct": bool(pct[1] >= -0.1),
+                            "p99_latency_s": round(m.p99_latency_s, 2),
+                        })
     emit("fig8_idle_cores", rows)
     return rows
 
 
 if __name__ == "__main__":
-    run(scenarios=parse_scenarios(__doc__))
+    scenarios, routers = parse_axes(__doc__)
+    run(scenarios=scenarios, routers=routers)

@@ -24,12 +24,15 @@ def main() -> None:
                     help="short traces (CI); full runs match the paper")
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig2,fig6,fig7,fig8,kern,ablations")
-    from benchmarks.common import add_scenario_arg, resolve_scenarios
+    from benchmarks.common import (add_router_arg, add_scenario_arg,
+                                   resolve_routers, resolve_scenarios)
     add_scenario_arg(ap)
+    add_router_arg(ap)
     args = ap.parse_args()
     dur = 30.0 if args.quick else 120.0
     only = set(args.only.split(",")) if args.only else None
     scenarios = resolve_scenarios(args)
+    routers = resolve_routers(args)
 
     def want(name: str) -> bool:
         return only is None or name in only
@@ -43,11 +46,14 @@ def main() -> None:
     if want("fig2"):
         fig2_task_distribution.run(duration_s=dur, scenarios=scenarios)
     if want("fig6"):
-        fig6_aging_effects.run(duration_s=dur, scenarios=scenarios)
+        fig6_aging_effects.run(duration_s=dur, scenarios=scenarios,
+                               routers=routers)
     if want("fig7"):
-        fig7_carbon.run(duration_s=dur, scenarios=scenarios)
+        fig7_carbon.run(duration_s=dur, scenarios=scenarios,
+                        routers=routers)
     if want("fig8"):
-        fig8_idle_cores.run(duration_s=dur, scenarios=scenarios)
+        fig8_idle_cores.run(duration_s=dur, scenarios=scenarios,
+                            routers=routers)
     if want("kern"):
         kernel_micro.run()
     if want("ablations") and not args.quick:

@@ -14,11 +14,14 @@ def main() -> None:
     ap.add_argument("--duration", type=float, default=120.0)
     ap.add_argument("--rate", type=float, default=70.0)
     ap.add_argument("--cores", type=int, default=40)
+    ap.add_argument("--router", default="jsq",
+                    help="cluster request router (see "
+                    "repro.sim.available_routers())")
     args = ap.parse_args()
 
     res = run_policy_sweep(ExperimentConfig(
         num_cores=args.cores, rate_rps=args.rate,
-        duration_s=args.duration, seed=1))
+        duration_s=args.duration, seed=1, router=args.router))
     linux, proposed = res["linux"], res["proposed"]
 
     print(f"cluster: 22 machines (5 prompt + 17 token), {args.cores}-core "
@@ -39,6 +42,9 @@ def main() -> None:
     lat = 100 * (proposed.p99_latency_s / linux.p99_latency_s - 1)
     print(f"{'service quality impact (p99 latency)':44s} "
           f"{'<10%':>10s} {lat:>+9.2f}%")
+    print(f"\nrouter: {args.router} — fleet degradation CV "
+          f"{proposed.fleet_degradation_cv:.4f}, fleet yearly embodied "
+          f"{proposed.fleet_yearly_kgco2eq:.1f} kgCO2eq")
 
 
 if __name__ == "__main__":

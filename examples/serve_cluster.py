@@ -55,6 +55,19 @@ def cluster_demo() -> None:
           f"{100*est.reduction_frac:.2f}%  (paper: 37.67%)")
 
 
+def routing_demo() -> None:
+    print("\n=== cluster-level routing (fleet aging imbalance) ===")
+    cfg = ExperimentConfig(num_cores=40, rate_rps=60, duration_s=60, seed=0)
+    res = run_policy_sweep(cfg, policies=("proposed",),
+                           routers=("jsq", "least-aged-cpu",
+                                    "carbon-greedy"))
+    for (policy, router), m in res.items():
+        print(f"{router:16s} fleet_deg_cv={m.fleet_degradation_cv:.4f} "
+              f"fleet_yearly={m.fleet_yearly_kgco2eq:7.1f} kgCO2eq "
+              f"lat_p99={m.p99_latency_s:.1f}s")
+
+
 if __name__ == "__main__":
     serve_demo()
     cluster_demo()
+    routing_demo()

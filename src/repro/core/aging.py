@@ -64,6 +64,25 @@ def _adf_unscaled(params: AgingParams, temp_c: float, stress: float) -> float:
     )
 
 
+# exp() factors per (params, T, Y) — the simulator only ever sees the
+# three Table-1 regimes, so this stays tiny. Keyed on the frozen params
+# value (hashable dataclass), NOT id(params): a GC'd-and-reused id could
+# otherwise serve stale factors for new params.
+_ADF_UNSCALED_CACHE: dict[tuple[AgingParams, float, float], float] = {}
+
+
+def adf_unscaled_cached(params: AgingParams, temp_c: float,
+                        stress: float) -> float:
+    """Memoized `_adf_unscaled` — the event-loop fast path (`CoreManager`
+    settles a core's regime on every assign/release)."""
+    key = (params, temp_c, stress)
+    v = _ADF_UNSCALED_CACHE.get(key)
+    if v is None:
+        v = _adf_unscaled(params, temp_c, stress)
+        _ADF_UNSCALED_CACHE[key] = v
+    return v
+
+
 def solve_k(params: AgingParams) -> AgingParams:
     """Calibrate K so worst-case 10-year aging costs 30% of frequency.
 

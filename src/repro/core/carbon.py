@@ -19,6 +19,8 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.core import aging, temperature
+
 CPU_EMBODIED_KGCO2EQ = 278.3   # per server CPU over baseline lifespan [18]
 BASELINE_LIFESPAN_YEARS = 3.0  # hardware refresh cycle [18]
 
@@ -59,6 +61,19 @@ def estimate(deg_linux: float, deg_technique: float,
 
 def cluster_yearly_emissions(per_server_estimates: list[CarbonEstimate]) -> float:
     return sum(e.yearly_kgco2eq for e in per_server_estimates)
+
+
+def reference_degradation(params: aging.AgingParams,
+                          elapsed_s: float) -> float:
+    """Worst-case mean frequency degradation of a fresh core aged
+    continuously at active-allocated stress for `elapsed_s` — the
+    linear-aging reference the carbon-greedy router and the fleet
+    carbon metrics normalize against (stands in for the `linux`
+    baseline of `lifetime_extension` within a single run)."""
+    dvth = aging.dvth_after(params, temperature.TEMP_ACTIVE_ALLOCATED_C,
+                            temperature.STRESS_ACTIVE,
+                            max(elapsed_s, 1e-9))
+    return params.f_nominal * dvth / params.headroom
 
 
 # ------------------------------------------------------------------ #

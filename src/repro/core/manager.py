@@ -70,6 +70,10 @@ class CoreManager:
         self.core_of_task: dict[int, int] = {}
         self.task_start: dict[int, float] = {}
         self.oversub_tasks: set[int] = set()
+        # task -> sim time up to which its oversubscribed wait has been
+        # added to `metrics.oversub_task_seconds` (each second of the
+        # T_oversub integral is counted exactly once).
+        self._oversub_accounted: dict[int, float] = {}
         self.metrics = ManagerMetrics()
         self.now = 0.0
         self._view = CoreView(self)
@@ -110,7 +114,7 @@ class CoreManager:
         tau = now - self.last_update[i]
         if tau > 0.0:
             t_c, y = self._regime(i)
-            a = self.params.K * _adf_unscaled_cached(self.params, t_c) if y > 0 else 0.0
+            a = self.params.K * aging.adf_unscaled_cached(self.params, t_c, y)
             self.dvth[i] = aging.advance_dvth_scalar(
                 self.params, float(self.dvth[i]), a, tau)
             self.last_update[i] = now
@@ -160,10 +164,19 @@ class CoreManager:
             self.oversub_tasks.add(task_id)
             self.core_of_task[task_id] = OVERSUBSCRIBED
             self.task_start[task_id] = now
+            self._oversub_accounted[task_id] = now
             self.metrics.oversub_assigns += 1
-            # Oversubscribed tasks time-share already-busy cores; nominal
-            # frequency of the fastest busy core bounds their speed.
-            return float(np.max(self._frequencies_now(settle=False)))
+            # Oversubscribed tasks time-share already-busy cores, so the
+            # settled frequency of the fastest *busy* core bounds their
+            # speed — pristine idle (or power-gated) cores are not
+            # executing anything and must not inflate the bound. Only
+            # when no core is busy at all (pure promotion races) fall
+            # back to the fleet-wide settled maximum.
+            freqs = aging.frequency(self.params, self.f0,
+                                    self._settled_dvth(now))
+            busy = self.task_of_core >= 0
+            pool = freqs[busy] if busy.any() else freqs
+            return float(np.max(pool))
 
         # End the core's idle period -> record idle duration (Alg. 1 input).
         idle_dur = now - self.idle_since[core]
@@ -184,7 +197,7 @@ class CoreManager:
             return
         if core == OVERSUBSCRIBED:
             self.oversub_tasks.discard(task_id)
-            self.metrics.oversub_task_seconds += now - start
+            self._account_oversub(task_id, now)
             self._promote_oversubscribed(now)
             return
         self._settle(core, now)          # settle allocated regime
@@ -193,6 +206,17 @@ class CoreManager:
         self.idle_since[core] = now
         self.policy.on_release(self._view, core)
         self._promote_oversubscribed(now)
+
+    def _account_oversub(self, task_id: int, now: float,
+                         final: bool = True) -> None:
+        """Add `task_id`'s not-yet-counted oversubscribed wait to the
+        T_oversub integral. `final=False` keeps the task in the books
+        (periodic accrual for still-waiting tasks)."""
+        since = (self._oversub_accounted.pop(task_id, now) if final
+                 else self._oversub_accounted.get(task_id, now))
+        self.metrics.oversub_task_seconds += max(now - since, 0.0)
+        if not final:
+            self._oversub_accounted[task_id] = now
 
     def _promote_oversubscribed(self, now: float) -> None:
         """When a core frees up, move a waiting oversubscribed task onto it.
@@ -209,7 +233,7 @@ class CoreManager:
                 return
             task_id = min(self.oversub_tasks)  # FIFO by id (ids are ordered)
             self.oversub_tasks.discard(task_id)
-            self.metrics.oversub_task_seconds += now - self.task_start[task_id]
+            self._account_oversub(task_id, now)
             core = mapping.select_core(active_mask, assigned_mask,
                                        self.idle_history)
             idle_dur = now - self.idle_since[core]
@@ -235,7 +259,11 @@ class CoreManager:
         self.metrics.idle_norm_samples.append((active - assigned - oversub) / n)
         self.metrics.active_count_samples.append(active)
         self.metrics.task_count_samples.append(assigned + oversub)
-        self.metrics.oversub_task_seconds += oversub * self.idling_period_s
+        # Keep the T_oversub integral live for still-waiting tasks; the
+        # remainder of each wait is added at release/promotion, so no
+        # second is ever counted twice.
+        for task_id in self.oversub_tasks:
+            self._account_oversub(task_id, now, final=False)
 
         corr = self.policy.periodic(self._view)
         if corr is None:
@@ -293,21 +321,3 @@ class CoreManager:
             "cv": float(np.std(f) / np.mean(f)),
             "mean_degradation": float(np.mean(self.f0 - f)),
         }
-
-
-# Cache exp() factors per (params, temperature) — only 3 temperatures exist.
-# Keyed on the frozen params value (hashable dataclass), NOT id(params): a
-# GC'd-and-reused id could otherwise serve stale factors for new params.
-_ADF_CACHE: dict[tuple[aging.AgingParams, float], float] = {}
-
-
-def _adf_unscaled_cached(params: aging.AgingParams, temp_c: float) -> float:
-    key = (params, temp_c)
-    v = _ADF_CACHE.get(key)
-    if v is None:
-        import math
-        t_k = temp_c + 273.15
-        v = (math.exp(-params.E0 / (params.kB * t_k))
-             * math.exp(params.c_field * params.vdd / (params.kB * t_k)))
-        _ADF_CACHE[key] = v
-    return v

@@ -8,6 +8,9 @@ from repro.sim.cluster import Cluster, Machine, PromptInstance, TokenInstance
 from repro.sim.config import ExperimentConfig
 from repro.sim.events import EventQueue
 from repro.sim.metrics import ExperimentMetrics, carbon_comparison, collect
+from repro.sim.routing import (ClusterRouter, FleetView, MachineAging,
+                               available_routers, canonical_router_name,
+                               get_router, register_router)
 from repro.sim.runner import (DEFAULT_SWEEP, run_experiment,
                               run_policy_sweep)
 from repro.sim.tasks import CPUTask, TASK_DURATIONS_S, TaskIdAllocator
@@ -16,6 +19,8 @@ from repro.sim.trace import Request, TraceConfig, generate, trace_stats
 __all__ = [
     "Cluster", "Machine", "PromptInstance", "TokenInstance", "EventQueue",
     "ExperimentConfig", "ExperimentMetrics", "carbon_comparison", "collect",
+    "ClusterRouter", "FleetView", "MachineAging", "available_routers",
+    "canonical_router_name", "get_router", "register_router",
     "DEFAULT_SWEEP", "run_experiment", "run_policy_sweep", "CPUTask",
     "TASK_DURATIONS_S", "TaskIdAllocator", "Request", "TraceConfig",
     "generate", "trace_stats",

@@ -22,6 +22,7 @@ import numpy as np
 from repro.core import OVERSUBSCRIBED, CoreManager
 from repro.sim.config import ExperimentConfig
 from repro.sim.events import EventQueue
+from repro.sim.routing import FleetView, get_router
 from repro.sim.tasks import TaskIdAllocator
 from repro.workloads import Request
 
@@ -208,18 +209,32 @@ class Cluster:
         self.completed: list[RequestState] = []
         for ti in self.token_instances:
             ti.on_request_done = self._request_done
+        # Cluster-level request routing (`repro.sim.routing`): the router
+        # only sees a read-only FleetView; RNG-driven routers draw from a
+        # cluster-owned stream so seeded runs stay reproducible.
+        self.router = get_router(cfg.router, **cfg.router_options)
+        self.router_rng = np.random.default_rng(cfg.seed * 1000 + 999)
+        self.fleet = FleetView(self)
 
     # ----------------------- scheduling policy ------------------------ #
+    def _route(self, select, n: int, kind: str) -> int:
+        idx = int(select(self.fleet))
+        if not 0 <= idx < n:
+            raise ValueError(f"router {self.router.name!r} returned "
+                             f"{kind} index {idx}, outside [0, {n})")
+        return idx
+
     def submit_request(self, req: Request) -> None:
         rs = RequestState(req, remaining=req.output_tokens,
                           t_arrival=self.queue.now)
-        # JSQ over prompt instances.
-        pi = min(self.prompt_instances, key=lambda p: len(p.queue) + p.busy)
+        pi = self.prompt_instances[self._route(
+            self.router.select_prompt, len(self.prompt_instances), "prompt")]
         pi.enqueue(rs, self._prefill_done)
 
     def _prefill_done(self, rs: RequestState) -> None:
-        # KV-cache flow to the least-loaded token instance over IB.
-        ti = min(self.token_instances, key=lambda t: t.load)
+        # KV-cache flow to the router-chosen token instance over IB.
+        ti = self.token_instances[self._route(
+            self.router.select_token, len(self.token_instances), "token")]
         flow_s = rs.req.input_tokens * KV_BYTES_PER_TOKEN / IB_LINK_BW_BPS
         self.queue.schedule_in(flow_s, lambda: ti.receive_kv(rs))
 

@@ -23,6 +23,7 @@ import dataclasses
 from typing import Any, Mapping
 
 from repro.core.policies import canonical_policy_name
+from repro.sim.routing import canonical_router_name
 from repro.workloads import canonical_scenario_name
 
 
@@ -39,6 +40,10 @@ class ExperimentConfig:
     # cluster topology (Splitwise phase-splitting deployment)
     n_prompt: int = 5
     n_token: int = 17
+    # cluster-level request routing (router registry name + constructor
+    # options; see `repro.sim.routing`)
+    router: str = "jsq"
+    router_opts: tuple[tuple[str, Any], ...] = ()
     # workload (scenario registry name + factory options; the scenario
     # receives rate_rps / duration_s / seed at generation time)
     scenario: str = "conversation-poisson"
@@ -58,7 +63,9 @@ class ExperimentConfig:
                            canonical_policy_name(self.policy))
         object.__setattr__(self, "scenario",
                            canonical_scenario_name(self.scenario))
-        for field in ("policy_opts", "scenario_opts"):
+        object.__setattr__(self, "router",
+                           canonical_router_name(self.router))
+        for field in ("policy_opts", "scenario_opts", "router_opts"):
             opts = getattr(self, field)
             if isinstance(opts, Mapping):
                 opts = opts.items()
@@ -83,6 +90,11 @@ class ExperimentConfig:
         """`scenario_opts` as a plain kwargs dict."""
         return dict(self.scenario_opts)
 
+    @property
+    def router_options(self) -> dict[str, Any]:
+        """`router_opts` as a plain kwargs dict."""
+        return dict(self.router_opts)
+
     def replace(self, **changes) -> "ExperimentConfig":
         """Frozen-friendly copy-with-overrides."""
         return dataclasses.replace(self, **changes)
@@ -100,3 +112,10 @@ class ExperimentConfig:
         return dataclasses.replace(self, scenario=scenario,
                                    scenario_opts=tuple(sorted(
                                        scenario_opts.items())))
+
+    def with_router(self, router: str,
+                    **router_opts) -> "ExperimentConfig":
+        """Same experiment, different routing (opts reset unless given)."""
+        return dataclasses.replace(self, router=router,
+                                   router_opts=tuple(sorted(
+                                       router_opts.items())))

@@ -27,10 +27,24 @@ class ExperimentMetrics:
     # paper Fig. 2: concurrent CPU tasks per machine
     task_count_mean: float
     task_count_max: int
-    # service quality
+    # service quality (NaN when nothing completed — a starved config must
+    # never rank as winning a latency comparison)
     mean_latency_s: float
     p99_latency_s: float
     completed: int
+    # cluster-routing axis (see `repro.sim.routing`)
+    router: str = "jsq"
+    # fleet-level aging imbalance: cross-machine CV of per-machine mean
+    # frequency degradation, computed within each serving role (prompt /
+    # token) and machine-count-weighted. A cluster router can only level
+    # aging among peers serving the same phase — the prompt/token role
+    # gap is deployment topology, not routing quality — so mixing roles
+    # into one CV would swamp the quantity routing actually controls.
+    fleet_degradation_cv: float = float("nan")
+    # per-machine embodied-carbon estimates vs the worst-case
+    # linear-aging reference at the same horizon, and their fleet total
+    per_machine_carbon: list = None
+    fleet_yearly_kgco2eq: float = float("nan")
     # raw per-machine values for downstream carbon estimates
     per_machine_cv: np.ndarray = None
     per_machine_degradation: np.ndarray = None
@@ -38,9 +52,24 @@ class ExperimentMetrics:
     per_machine_task_samples: list = None
 
 
+def _role_weighted_cv(degs: np.ndarray, n_prompt: int) -> float:
+    """Cross-machine degradation CV within each serving role, weighted
+    by machine count (see `ExperimentMetrics.fleet_degradation_cv`)."""
+    parts = []
+    for group in (degs[:n_prompt], degs[n_prompt:]):
+        mean = float(group.mean()) if len(group) else 0.0
+        if mean > 0:
+            parts.append((len(group), float(group.std()) / mean))
+    if not parts:
+        return float("nan")
+    total = sum(n for n, _ in parts)
+    return sum(n * cv for n, cv in parts) / total
+
+
 def collect(cluster: Cluster, policy: str, num_cores: int,
             rate_rps: float,
-            scenario: str = "conversation-poisson") -> ExperimentMetrics:
+            scenario: str = "conversation-poisson",
+            router: str = "jsq") -> ExperimentMetrics:
     cvs, degs, idle_all = [], [], []
     task_samples = []
     for m in cluster.machines:
@@ -52,10 +81,25 @@ def collect(cluster: Cluster, policy: str, num_cores: int,
     cvs = np.asarray(cvs)
     degs = np.asarray(degs)
     idle_all = np.asarray(idle_all) if idle_all else np.zeros(1)
-    lat = np.asarray([
-        rs.t_done - rs.t_arrival for rs in cluster.completed
-    ]) if cluster.completed else np.zeros(1)
+    if cluster.completed:
+        lat = np.asarray([rs.t_done - rs.t_arrival
+                          for rs in cluster.completed])
+        mean_latency = float(lat.mean())
+        p99_latency = float(np.percentile(lat, 99))
+    else:
+        # Nothing completed: report NaN, not a fabricated perfect
+        # latency of 0.0 that would rank a starved config as winning.
+        mean_latency = p99_latency = float("nan")
     all_tasks = np.concatenate(task_samples) if task_samples else np.zeros(1)
+
+    # Fleet-level aging imbalance + per-machine embodied carbon vs the
+    # worst-case linear-aging reference at the same horizon.
+    fleet_cv = _role_weighted_cv(degs, len(cluster.prompt_instances))
+    elapsed = max(m.manager.now for m in cluster.machines)
+    deg_ref = carbon.reference_degradation(
+        cluster.machines[0].manager.params, elapsed)
+    per_machine_carbon = [carbon.estimate(deg_ref, max(float(d), 0.0))
+                          for d in degs]
 
     def pct(x):
         return {p: float(np.percentile(x, p)) for p in PERCENTILES}
@@ -71,9 +115,14 @@ def collect(cluster: Cluster, policy: str, num_cores: int,
         oversub_frac_below=float((idle_all < -0.1).mean()),
         task_count_mean=float(all_tasks.mean()),
         task_count_max=int(all_tasks.max()),
-        mean_latency_s=float(lat.mean()),
-        p99_latency_s=float(np.percentile(lat, 99)),
+        mean_latency_s=mean_latency,
+        p99_latency_s=p99_latency,
         completed=len(cluster.completed),
+        router=router,
+        fleet_degradation_cv=fleet_cv,
+        per_machine_carbon=per_machine_carbon,
+        fleet_yearly_kgco2eq=float(sum(e.yearly_kgco2eq
+                                       for e in per_machine_carbon)),
         per_machine_cv=cvs,
         per_machine_degradation=degs,
         per_machine_idle_norm=[np.asarray(m.manager.metrics.idle_norm_samples)

@@ -1,0 +1,367 @@
+"""Cluster-level request routing — the paper's *second* allocation layer.
+
+The technique allocates at two levels: per-core task mapping inside one
+server (Algorithm 1, `repro.core.policies`) and "aging-aware inference
+task allocation" across the fleet (paper §5). This module makes the
+fleet-level decision pluggable the same way `repro.core.policies` and
+`repro.workloads` made the per-core and workload axes pluggable: a
+string-keyed registry of `ClusterRouter` strategies that decide
+
+  * which *prompt* instance admits an arriving request, and
+  * which *token* instance receives its KV-cache flow,
+
+given a read-only `FleetView` (per-instance queue depths / decode loads
+plus per-machine CPU aging snapshots: mean frequency degradation,
+frequency CV, active-core count).
+
+Built-ins:
+
+  jsq            — join-shortest-queue / least-loaded (bit-exact with the
+                   previously hard-coded `Cluster` behaviour)
+  round-robin    — cyclic placement strawman
+  power-of-two   — sample two instances, take the less loaded (Mitzenmacher)
+  least-aged-cpu — among load-feasible instances, route toward the
+                   machine with the freshest host CPU (evens fleet aging)
+  carbon-greedy  — EcoServe-style: among load-feasible instances, pick the
+                   placement minimizing projected fleet yearly embodied
+                   carbon (`repro.core.carbon.estimate` over per-machine
+                   degradation); NBTI aging is concave in time, so the
+                   marginal carbon of one more task is smallest on the
+                   *most* aged machine — old servers soak up load while
+                   fresh ones amortize slowly.
+
+Routers are per-cluster objects (they may carry cursors or RNG-driven
+state) and must route through the `FleetView` only — they never see the
+`Cluster` or mutate machine state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar
+
+import numpy as np
+
+from repro.core import aging, carbon, temperature
+
+
+# --------------------------------------------------------------------- #
+# read-only fleet state
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class MachineAging:
+    """Point-in-time aging snapshot of one machine's host CPU (the data a
+    fleet scheduler would read from per-server aging sensors, paper §5)."""
+
+    machine_id: int
+    mean_degradation: float   # mean(f0 - f) over cores, settled to `now`
+    freq_cv: float            # std(f)/mean(f) over cores
+    active_cores: int         # cores not power-gated (C6)
+    mean_dvth: float          # mean threshold-voltage shift [V]
+    mean_f0: float            # mean process-variation initial frequency
+
+
+class FleetView:
+    """Read-only window onto a `Cluster` for routing decisions.
+
+    Mirrors `repro.core.policies.CoreView` one level up: routers get
+    load and aging observability but no mutable handles. Aging
+    snapshots are settled to `now` *without* mutating manager state
+    (`CoreManager._settled_dvth` is pure), so a router that never reads
+    them — e.g. `jsq` — leaves the simulation bit-exact.
+    """
+
+    __slots__ = ("_c",)
+
+    def __init__(self, cluster):
+        self._c = cluster
+
+    # -- shape / clock ------------------------------------------------- #
+    @property
+    def now(self) -> float:
+        return self._c.queue.now
+
+    @property
+    def n_prompt(self) -> int:
+        return len(self._c.prompt_instances)
+
+    @property
+    def n_token(self) -> int:
+        return len(self._c.token_instances)
+
+    @property
+    def rng(self) -> np.random.Generator:
+        """Cluster-owned router RNG (seeded from the experiment seed)."""
+        return self._c.router_rng
+
+    @property
+    def aging_params(self) -> aging.AgingParams:
+        return self._c.machines[0].manager.params
+
+    # -- load ---------------------------------------------------------- #
+    def prompt_depths(self) -> np.ndarray:
+        """(n_prompt,) int — queued + in-flight prefills per instance."""
+        return np.asarray([len(p.queue) + p.busy
+                           for p in self._c.prompt_instances])
+
+    def token_loads(self) -> np.ndarray:
+        """(n_token,) int — active + pending decode requests per instance."""
+        return np.asarray([t.load for t in self._c.token_instances])
+
+    # -- aging --------------------------------------------------------- #
+    def _snapshot(self, machine) -> MachineAging:
+        m = machine.manager
+        dvth = m._settled_dvth(self.now)
+        f = aging.frequency(m.params, m.f0, dvth)
+        return MachineAging(
+            machine_id=machine.machine_id,
+            mean_degradation=float(np.mean(m.f0 - f)),
+            freq_cv=float(np.std(f) / np.mean(f)),
+            active_cores=int((m.c_state == temperature.CState.ACTIVE).sum()),
+            mean_dvth=float(np.mean(dvth)),
+            mean_f0=float(np.mean(m.f0)),
+        )
+
+    def prompt_aging(self, indices=None) -> tuple[MachineAging, ...]:
+        """Snapshots of the prompt machines' CPUs; pass `indices` to
+        snapshot only candidate instances (each snapshot settles every
+        core of its machine — skipping non-candidates matters on the
+        per-request hot path)."""
+        inst = self._c.prompt_instances
+        if indices is None:
+            indices = range(len(inst))
+        return tuple(self._snapshot(inst[i].machine) for i in indices)
+
+    def token_aging(self, indices=None) -> tuple[MachineAging, ...]:
+        """Snapshots of the token machines' CPUs (see `prompt_aging`)."""
+        inst = self._c.token_instances
+        if indices is None:
+            indices = range(len(inst))
+        return tuple(self._snapshot(inst[i].machine) for i in indices)
+
+
+# --------------------------------------------------------------------- #
+# protocol + registry
+# --------------------------------------------------------------------- #
+class ClusterRouter:
+    """Base class for cluster-level request-routing strategies.
+
+    Subclasses register under a string key with `@register_router(name)`
+    and are instantiated per-cluster via `get_router(name, **opts)`.
+    Both hooks return an *index* (into the prompt / token instance
+    lists), not a machine id.
+    """
+
+    #: canonical registry key, set by @register_router
+    name: ClassVar[str] = "?"
+
+    def select_prompt(self, fleet: FleetView) -> int:
+        """Pick the prompt instance that admits the next request."""
+        raise NotImplementedError
+
+    def select_token(self, fleet: FleetView) -> int:
+        """Pick the token instance that receives a finished prefill's
+        KV-cache flow."""
+        raise NotImplementedError
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}(name={self.name!r})"
+
+
+_REGISTRY: dict[str, type[ClusterRouter]] = {}
+
+
+def canonical_router_name(name: str) -> str:
+    """Normalize a user-supplied router key ("Power_Of_Two" style)."""
+    return str(name).strip().lower().replace("_", "-")
+
+
+def register_router(name: str):
+    """Class decorator: register a `ClusterRouter` subclass under `name`."""
+    key = canonical_router_name(name)
+
+    def deco(cls: type[ClusterRouter]) -> type[ClusterRouter]:
+        if not (isinstance(cls, type) and issubclass(cls, ClusterRouter)):
+            raise TypeError(f"@register_router({name!r}) expects a "
+                            f"ClusterRouter subclass, got {cls!r}")
+        prev = _REGISTRY.get(key)
+        if prev is not None and prev is not cls:
+            raise ValueError(f"router name {key!r} already registered "
+                             f"to {prev.__name__}")
+        cls.name = key
+        _REGISTRY[key] = cls
+        return cls
+
+    return deco
+
+
+def get_router(name: str, **opts) -> ClusterRouter:
+    """Instantiate the router registered under `name` with `opts`."""
+    key = canonical_router_name(name)
+    try:
+        cls = _REGISTRY[key]
+    except KeyError:
+        raise KeyError(
+            f"unknown cluster router {name!r}; available: "
+            f"{', '.join(available_routers())}") from None
+    return cls(**opts)
+
+
+def available_routers() -> tuple[str, ...]:
+    """Sorted canonical names of every registered router."""
+    return tuple(sorted(_REGISTRY))
+
+
+# --------------------------------------------------------------------- #
+# built-ins
+# --------------------------------------------------------------------- #
+@register_router("jsq")
+class JSQRouter(ClusterRouter):
+    """Join-shortest-queue prompts + least-loaded tokens.
+
+    Bit-exact with the behaviour `Cluster` hard-coded before routing
+    became pluggable (golden-pinned in tests): first minimum wins ties,
+    and no aging state or RNG is read.
+    """
+
+    def select_prompt(self, fleet: FleetView) -> int:
+        return int(np.argmin(fleet.prompt_depths()))
+
+    def select_token(self, fleet: FleetView) -> int:
+        return int(np.argmin(fleet.token_loads()))
+
+
+@register_router("round-robin")
+class RoundRobinRouter(ClusterRouter):
+    """Cyclic placement, load- and aging-oblivious."""
+
+    def __init__(self):
+        self._p = 0
+        self._t = 0
+
+    def select_prompt(self, fleet: FleetView) -> int:
+        i = self._p % fleet.n_prompt
+        self._p += 1
+        return i
+
+    def select_token(self, fleet: FleetView) -> int:
+        i = self._t % fleet.n_token
+        self._t += 1
+        return i
+
+
+@register_router("power-of-two")
+class PowerOfTwoRouter(ClusterRouter):
+    """Sample two instances uniformly, route to the less loaded one
+    (the power-of-two-choices load balancer). Uses the cluster's
+    seeded router RNG, so runs stay reproducible."""
+
+    @staticmethod
+    def _pick(rng: np.random.Generator, loads: np.ndarray) -> int:
+        n = len(loads)
+        if n == 1:
+            return 0
+        i, j = rng.choice(n, size=2, replace=False)
+        return int(i if loads[i] <= loads[j] else j)
+
+    def select_prompt(self, fleet: FleetView) -> int:
+        return self._pick(fleet.rng, fleet.prompt_depths())
+
+    def select_token(self, fleet: FleetView) -> int:
+        return self._pick(fleet.rng, fleet.token_loads())
+
+
+def _feasible(loads: np.ndarray, slack: int) -> np.ndarray:
+    """Indices whose load is within `slack` of the minimum — the
+    candidates an aging/carbon-aware router may choose among without
+    sacrificing service quality."""
+    return np.flatnonzero(loads <= loads.min() + slack)
+
+
+@register_router("least-aged-cpu")
+class LeastAgedCPURouter(ClusterRouter):
+    """Route toward the machines with the freshest host CPUs.
+
+    Among instances whose load is within `slack` of the fleet minimum,
+    pick the one whose host CPU shows the smallest settled mean
+    frequency degradation. The default `slack=0` strictly refines jsq:
+    load placement quality is untouched and only ties — which jsq breaks
+    by a fixed index bias — are broken toward the freshest machine,
+    evening out cross-machine aging (lower fleet degradation CV).
+    Raising `slack` trades queue evenness for stronger wear-leveling;
+    NBTI's concave time dependence makes large slacks overshoot.
+    """
+
+    def __init__(self, slack: int = 0):
+        if slack < 0:
+            raise ValueError(f"slack must be >= 0, got {slack}")
+        self.slack = slack
+
+    def _select(self, loads, snapshot) -> int:
+        cand = _feasible(loads, self.slack)
+        if len(cand) == 1:
+            return int(cand[0])
+        deg = [s.mean_degradation for s in snapshot(cand)]
+        return int(cand[int(np.argmin(deg))])
+
+    def select_prompt(self, fleet: FleetView) -> int:
+        return self._select(fleet.prompt_depths(), fleet.prompt_aging)
+
+    def select_token(self, fleet: FleetView) -> int:
+        return self._select(fleet.token_loads(), fleet.token_aging)
+
+
+@register_router("carbon-greedy")
+class CarbonGreedyRouter(ClusterRouter):
+    """Minimize projected fleet yearly embodied carbon (EcoServe-style).
+
+    For each load-feasible candidate, project the machine's mean
+    degradation after absorbing one more task interval (`tau_s` of
+    active-allocated NBTI stress on its mean dVth) and score the whole
+    fleet with `repro.core.carbon.estimate` against a worst-case
+    linear-aging reference at the same horizon. NBTI is concave in
+    accumulated stress time, so the marginal carbon of a task is
+    smallest on the most-aged machine: carbon-greedy concentrates load
+    on old CPUs and shelters fresh ones — the opposite of
+    `least-aged-cpu`, and the trade EcoServe exploits.
+    """
+
+    def __init__(self, slack: int = 2, tau_s: float = 0.01):
+        if slack < 0:
+            raise ValueError(f"slack must be >= 0, got {slack}")
+        if tau_s <= 0.0:
+            raise ValueError(f"tau_s must be > 0, got {tau_s}")
+        self.slack = slack
+        self.tau_s = tau_s
+
+    def _select(self, fleet: FleetView, loads, snapshot) -> int:
+        cand = _feasible(loads, self.slack)
+        if len(cand) == 1:
+            return int(cand[0])
+        params = fleet.aging_params
+        deg_ref = carbon.reference_degradation(params, fleet.now)
+        adf_active = params.K * aging.adf_unscaled_cached(
+            params, temperature.TEMP_ACTIVE_ALLOCATED_C,
+            temperature.STRESS_ACTIVE)
+        # Fleet totals across candidates share every j != i term, so the
+        # argmin over projected fleet carbon reduces to the candidate's
+        # own marginal increase.
+        best, best_delta = int(cand[0]), np.inf
+        for i, s in zip(cand, snapshot(cand)):
+            dvth_next = aging.advance_dvth_scalar(
+                params, s.mean_dvth, adf_active, self.tau_s)
+            deg_next = s.mean_degradation \
+                + s.mean_f0 * (dvth_next - s.mean_dvth) / params.headroom
+            delta = (carbon.estimate(deg_ref, max(deg_next, 0.0))
+                     .yearly_kgco2eq
+                     - carbon.estimate(deg_ref, max(s.mean_degradation, 0.0))
+                     .yearly_kgco2eq)
+            if delta < best_delta:
+                best, best_delta = int(i), delta
+        return best
+
+    def select_prompt(self, fleet: FleetView) -> int:
+        return self._select(fleet, fleet.prompt_depths(),
+                            fleet.prompt_aging)
+
+    def select_token(self, fleet: FleetView) -> int:
+        return self._select(fleet, fleet.token_loads(), fleet.token_aging)

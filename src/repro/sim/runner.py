@@ -12,6 +12,17 @@ policy x scenario grids:
                              scenarios=("conversation-poisson",
                                         "conversation-mmpp"))
     sweep[("proposed", "conversation-mmpp")].p99_latency_s
+
+With `routers=` the cluster-level routing axis (`repro.sim.routing`)
+joins the grid, keyed `(policy, router)` or `(policy, scenario,
+router)`:
+
+    grid = run_policy_sweep(cfg, policies=("linux", "proposed"),
+                            scenarios=("conversation-poisson",
+                                       "conversation-mmpp"),
+                            routers=("jsq", "least-aged-cpu",
+                                     "carbon-greedy"))
+    grid[("proposed", "conversation-mmpp", "carbon-greedy")]
 """
 from __future__ import annotations
 
@@ -19,6 +30,7 @@ from repro.core.policies import canonical_policy_name
 from repro.sim import metrics as metrics_mod
 from repro.sim.cluster import Cluster
 from repro.sim.config import ExperimentConfig
+from repro.sim.routing import canonical_router_name
 from repro.workloads import canonical_scenario_name, get_scenario
 
 DEFAULT_SWEEP = ("linux", "least-aged", "proposed")
@@ -36,38 +48,46 @@ def run_experiment(cfg: ExperimentConfig) -> metrics_mod.ExperimentMetrics:
     cluster = Cluster(cfg)
     cluster.run(trace, cfg.duration_s, sample_period_s=cfg.sample_period_s)
     return metrics_mod.collect(cluster, cfg.policy, cfg.num_cores,
-                               cfg.rate_rps, scenario=cfg.scenario)
+                               cfg.rate_rps, scenario=cfg.scenario,
+                               router=cfg.router)
 
 
 def run_policy_sweep(
     cfg: ExperimentConfig | None = None,
     policies=DEFAULT_SWEEP,
     scenarios=None,
+    routers=None,
 ) -> dict:
-    """Run the same experiment under each policy (and scenario).
+    """Run the same experiment across policies (x scenarios x routers).
 
-    Policies/scenarios are given by registry name. With `scenarios=None`
-    (default) the result is keyed by policy name and the workload is
-    `cfg.scenario`, preserving the single-workload API. With an iterable
-    of scenario names, the result is keyed by `(policy, scenario)`
-    tuples. `cfg.policy_opts` / `cfg.scenario_opts` only apply to the
-    sweep entries matching `cfg.policy` / `cfg.scenario`.
+    Policies/scenarios/routers are given by registry name. With
+    `scenarios=None` and `routers=None` (default) the result is keyed by
+    policy name, preserving the single-axis API. Adding `scenarios=`
+    keys by `(policy, scenario)`; adding `routers=` keys by `(policy,
+    router)`; both together key by `(policy, scenario, router)`.
+    `cfg.policy_opts` / `cfg.scenario_opts` / `cfg.router_opts` only
+    apply to the sweep entries matching `cfg.policy` / `cfg.scenario` /
+    `cfg.router`.
     """
     if cfg is None:
         cfg = ExperimentConfig()
-    if scenarios is None:
-        out = {}
-        for p in policies:
-            run_cfg = _with_policy(cfg, p)
-            out[run_cfg.policy] = run_experiment(run_cfg)
-        return out
+    scenario_axis = scenarios is not None
+    router_axis = routers is not None
     out = {}
-    for s in scenarios:
+    for s in (scenarios if scenario_axis else (cfg.scenario,)):
         s_name = canonical_scenario_name(s)
         s_cfg = cfg if s_name == cfg.scenario else cfg.with_scenario(s_name)
-        for p in policies:
-            run_cfg = _with_policy(s_cfg, p)
-            out[(run_cfg.policy, s_name)] = run_experiment(run_cfg)
+        for r in (routers if router_axis else (cfg.router,)):
+            r_name = canonical_router_name(r)
+            r_cfg = s_cfg if r_name == s_cfg.router \
+                else s_cfg.with_router(r_name)
+            for p in policies:
+                run_cfg = _with_policy(r_cfg, p)
+                key = ((run_cfg.policy,)
+                       + ((s_name,) if scenario_axis else ())
+                       + ((r_name,) if router_axis else ()))
+                out[key if len(key) > 1 else key[0]] = \
+                    run_experiment(run_cfg)
     return out
 
 

@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 
-from repro.core import CoreManager
+from repro.core import CoreManager, OVERSUBSCRIBED, aging
 from repro.core.temperature import CState
 
 PAPER_POLICIES = ("proposed", "linux", "least-aged")
@@ -209,3 +209,64 @@ class TestManagerInvariants:
         for i in range(5):
             m.release(i, 1.0)
         assert m.metrics.oversub_task_seconds >= before
+
+
+class TestOversubscription:
+    def test_speed_bounded_by_fastest_busy_core(self):
+        """An oversubscribed task time-shares busy cores, so its speed
+        bound is the settled frequency of the fastest *busy* core — a
+        pristine power-gated core must not inflate it (pre-PR-3 bug:
+        np.max over all cores with stale dVth)."""
+        m = make("proposed", n=8, seed=3)
+        m.assign(0, 0.0)
+        for k in range(30):                    # shrink the working set
+            m.periodic(float(k + 1))
+        assert (m.c_state == CState.DEEP_IDLE).any()
+        now = 31.0
+        # make a power-gated core the fleet's fastest by construction
+        gated = int(np.flatnonzero(m.c_state == CState.DEEP_IDLE)[0])
+        m.f0[gated] = m.f0.max() + 0.5
+        # saturate every free working-set core, then oversubscribe
+        tid = 1
+        while ((m.c_state == CState.ACTIVE) & (m.task_of_core < 0)).any():
+            m.assign(tid, now)
+            tid += 1
+        speed = m.assign(tid, now)
+        assert m.core_of_task[tid] == OVERSUBSCRIBED
+        freqs = aging.frequency(m.params, m.f0, m._settled_dvth(now))
+        busy = m.task_of_core >= 0
+        assert speed == float(freqs[busy].max())
+        # the old all-cores bound would have picked the gated core
+        assert speed < float(freqs.max())
+
+    def test_speed_falls_back_to_fleet_max_when_nothing_busy(self):
+        m = make("proposed", n=4, seed=0)
+        m.c_state[:] = CState.DEEP_IDLE        # force an empty working set
+        speed = m.assign(0, 1.0)
+        assert m.core_of_task[0] == OVERSUBSCRIBED
+        freqs = aging.frequency(m.params, m.f0, m._settled_dvth(1.0))
+        assert speed == float(freqs.max())
+
+    def test_oversub_seconds_counted_exactly_once(self):
+        """Pin the T_oversub integral for a hand-built schedule: one task
+        waits from t=0 to its promotion at t=2.5 (integral 2.5), a second
+        waits 4.0 -> 4.6 (integral 0.6). The pre-PR-3 code added the
+        periodic accrual AND the full wall time again at promotion."""
+        m = make("linux", n=1, idling_period_s=1.0)
+        m.assign(0, 0.0)                       # occupies the only core
+        m.assign(1, 0.0)                       # oversubscribed
+        m.periodic(1.0)
+        assert m.metrics.oversub_task_seconds == pytest.approx(1.0)
+        m.periodic(2.0)
+        assert m.metrics.oversub_task_seconds == pytest.approx(2.0)
+        m.release(0, 2.5)                      # promotes task 1 at 2.5
+        assert m.core_of_task[1] == 0
+        assert m.metrics.oversub_task_seconds == pytest.approx(2.5)
+        m.release(1, 3.0)                      # on-core time is not oversub
+        assert m.metrics.oversub_task_seconds == pytest.approx(2.5)
+        m.assign(2, 4.0)
+        m.assign(3, 4.0)                       # oversubscribed
+        m.release(3, 4.6)                      # released while still waiting
+        assert m.metrics.oversub_task_seconds == pytest.approx(3.1)
+        m.periodic(5.0)                        # no waiting tasks -> no accrual
+        assert m.metrics.oversub_task_seconds == pytest.approx(3.1)

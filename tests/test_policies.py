@@ -13,8 +13,8 @@ import pytest
 
 from repro.core import (CoreManager, CorePolicy, OVERSUBSCRIBED,
                         available_policies, get_policy, register_policy)
-from repro.core.manager import _adf_unscaled_cached
-from repro.core.aging import AgingParams, solve_k
+from repro.core.aging import (AgingParams, _adf_unscaled,
+                              adf_unscaled_cached, solve_k)
 from repro.core.policies import canonical_policy_name
 from repro.sim import ExperimentConfig, run_experiment, run_policy_sweep
 
@@ -24,14 +24,19 @@ ALL_POLICIES = ("proposed", "linux", "least-aged", "round-robin",
 # Captured from the seed (pre-refactor) implementation:
 #   run_experiment(Policy.<P>, num_cores=40, rate_rps=50, duration_s=15,
 #                  seed=7)
+# `proposed` re-captured after the PR-3 oversubscription bugfix (the
+# speed of an oversubscribed task is now bounded by the settled
+# frequency of the fastest *busy* core, not a stale max over all cores
+# including pristine idle ones); linux/least-aged never oversubscribe
+# and still match the pre-refactor capture bit-exactly.
 GOLD = {
     "proposed": {
-        "freq_cv_p50": 0.03968788345364856,
-        "deg_p50": 0.011173555663340898,
-        "deg_p99": 0.01161638537815613,
-        "idle_p90": 0.1,
-        "mean_latency_s": 6.91893689800741,
-        "completed": 185,
+        "freq_cv_p50": 0.0396535760088097,
+        "deg_p50": 0.011188619627776467,
+        "deg_p99": 0.011773737700802438,
+        "idle_p90": 0.052500000000000574,
+        "mean_latency_s": 6.913202157881033,
+        "completed": 187,
     },
     "linux": {
         "freq_cv_p50": 0.0399780035035772,
@@ -316,21 +321,29 @@ class TestAdfCacheKeying:
         """id(params) reuse after GC must never serve stale factors: the
         cache is keyed on the frozen params fields, so distinct values
         always compute distinct factors (and equal values may share)."""
-        import math
-
-        def direct(p, t_c):
-            t_k = t_c + 273.15
-            return (math.exp(-p.E0 / (p.kB * t_k))
-                    * math.exp(p.c_field * p.vdd / (p.kB * t_k)))
-
         for e0 in (0.15, 0.1897, 0.25):
             p = solve_k(AgingParams(E0=e0))
-            got = _adf_unscaled_cached(p, 54.0)
-            assert got == pytest.approx(direct(p, 54.0), rel=1e-12)
+            got = adf_unscaled_cached(p, 54.0, 1.0)
+            assert got == pytest.approx(_adf_unscaled(p, 54.0, 1.0),
+                                        rel=1e-12)
             del p  # allow id reuse for the next iteration — must not alias
 
     def test_equal_params_share_cache_entry(self):
         p1 = solve_k(AgingParams())
         p2 = solve_k(AgingParams())
         assert p1 is not p2 and p1 == p2
-        assert _adf_unscaled_cached(p1, 54.0) == _adf_unscaled_cached(p2, 54.0)
+        assert (adf_unscaled_cached(p1, 54.0, 1.0)
+                == adf_unscaled_cached(p2, 54.0, 1.0))
+
+    def test_cached_matches_uncached_for_nonunit_stress(self):
+        """The pre-PR-3 manager-local cache dropped the stress**n factor
+        (benign only because STRESS_ACTIVE == 1.0); the relocated cache
+        must agree with `_adf_unscaled` for any stress level."""
+        p = solve_k(AgingParams())
+        for stress in (0.25, 0.5, 0.75, 1.0, 2.0):
+            for t_c in (48.0, 51.08, 54.0):
+                assert (adf_unscaled_cached(p, t_c, stress)
+                        == _adf_unscaled(p, t_c, stress))
+        assert adf_unscaled_cached(p, 54.0, 0.5) != \
+            adf_unscaled_cached(p, 54.0, 1.0)
+        assert adf_unscaled_cached(p, 54.0, 0.0) == 0.0

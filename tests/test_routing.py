@@ -1,0 +1,213 @@
+"""Tests for the pluggable cluster-routing subsystem (`repro.sim.routing`):
+registry semantics, the jsq golden pin against the pre-registry
+hard-coded Cluster behaviour, aging/carbon-aware routing effects, and
+the policy x scenario x router sweep grid."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.sim import (Cluster, ClusterRouter, ExperimentConfig, FleetView,
+                       available_routers, canonical_router_name, collect,
+                       get_router, register_router, run_experiment,
+                       run_policy_sweep)
+from repro.sim.cluster import (IB_LINK_BW_BPS, KV_BYTES_PER_TOKEN,
+                               RequestState)
+from repro.workloads import get_scenario
+
+BUILTINS = ("jsq", "round-robin", "power-of-two", "least-aged-cpu",
+            "carbon-greedy")
+
+
+class TestRegistry:
+    def test_builtins_present(self):
+        assert set(BUILTINS) <= set(available_routers())
+
+    def test_roundtrip_every_registered_name(self):
+        for name in available_routers():
+            r = get_router(name)
+            assert isinstance(r, ClusterRouter)
+            assert r.name == name
+
+    def test_name_normalization(self):
+        assert canonical_router_name("Least_Aged_CPU") == "least-aged-cpu"
+        assert type(get_router("power_of_two")) is \
+            type(get_router("power-of-two"))
+
+    def test_unknown_name_lists_available(self):
+        with pytest.raises(KeyError, match="jsq"):
+            get_router("definitely-not-a-router")
+
+    def test_fresh_instance_per_call(self):
+        assert get_router("round-robin") is not get_router("round-robin")
+
+    def test_router_opts_forwarded(self):
+        assert get_router("least-aged-cpu", slack=5).slack == 5
+        with pytest.raises(ValueError):
+            get_router("least-aged-cpu", slack=-1)
+        with pytest.raises(TypeError):
+            get_router("jsq", bogus_opt=1)
+
+    def test_duplicate_registration_rejected(self):
+        with pytest.raises(ValueError, match="already registered"):
+            @register_router("jsq")
+            class Imposter(ClusterRouter):
+                pass
+
+    def test_config_canonicalizes_router(self):
+        cfg = ExperimentConfig(router="Carbon_Greedy",
+                               router_opts={"slack": 3})
+        assert cfg.router == "carbon-greedy"
+        assert cfg.router_options == {"slack": 3}
+        assert cfg.with_router("jsq").router_opts == ()
+
+    def test_out_of_range_router_index_rejected(self):
+        @register_router("test-broken")
+        class Broken(ClusterRouter):
+            def select_prompt(self, fleet):
+                return fleet.n_prompt  # off by one
+
+        try:
+            cluster = Cluster(ExperimentConfig(router="test-broken"))
+            with pytest.raises(ValueError, match="outside"):
+                cluster.submit_request(get_scenario(
+                    "conversation-poisson").generate(
+                        rate_rps=10, duration_s=1, seed=0)[0])
+        finally:
+            from repro.sim import routing
+            routing._REGISTRY.pop("test-broken", None)
+
+
+class _HardcodedJSQCluster(Cluster):
+    """The exact request-placement code `Cluster` hard-coded before
+    routing became pluggable — the golden reference for the jsq router."""
+
+    def submit_request(self, req):
+        rs = RequestState(req, remaining=req.output_tokens,
+                          t_arrival=self.queue.now)
+        pi = min(self.prompt_instances, key=lambda p: len(p.queue) + p.busy)
+        pi.enqueue(rs, self._prefill_done)
+
+    def _prefill_done(self, rs):
+        ti = min(self.token_instances, key=lambda t: t.load)
+        flow_s = rs.req.input_tokens * KV_BYTES_PER_TOKEN / IB_LINK_BW_BPS
+        self.queue.schedule_in(flow_s, lambda: ti.receive_kv(rs))
+
+
+class TestJSQGolden:
+    @pytest.mark.parametrize("policy", ("proposed", "linux"))
+    def test_jsq_bit_exact_vs_hardcoded(self, policy):
+        """The jsq router must reproduce the pre-registry hard-coded
+        placement bit-exactly: same completions, same latencies."""
+        cfg = ExperimentConfig(policy=policy, rate_rps=50, duration_s=12,
+                               seed=11, router="jsq")
+        trace = get_scenario(cfg.scenario).generate(
+            rate_rps=cfg.rate_rps, duration_s=cfg.duration_s, seed=cfg.seed)
+        results = []
+        for cls in (Cluster, _HardcodedJSQCluster):
+            cluster = cls(cfg)
+            cluster.run(list(trace), cfg.duration_s)
+            results.append(sorted((rs.req.arrival_s,
+                                   rs.t_first_token, rs.t_done)
+                                  for rs in cluster.completed))
+        assert len(results[0]) > 0
+        assert results[0] == results[1]
+
+
+class TestRoutingBehaviour:
+    @pytest.mark.parametrize("router", BUILTINS)
+    def test_completes_and_deterministic(self, router):
+        cfg = ExperimentConfig(rate_rps=40, duration_s=8, seed=2,
+                               router=router)
+        a, b = run_experiment(cfg), run_experiment(cfg)
+        assert a.completed > 0
+        assert a.router == router
+        assert a.mean_latency_s == b.mean_latency_s
+        assert a.fleet_degradation_cv == b.fleet_degradation_cv
+
+    def test_least_aged_cpu_lowers_fleet_degradation_cv(self):
+        """The aging-aware router must even out cross-machine aging:
+        lower CV of per-machine mean degradation than load-only jsq."""
+        cfg = ExperimentConfig(rate_rps=60, duration_s=30, seed=0)
+        jsq = run_experiment(cfg)
+        aged = run_experiment(cfg.with_router("least-aged-cpu"))
+        assert aged.fleet_degradation_cv < jsq.fleet_degradation_cv
+
+    def test_round_robin_cycles(self):
+        r = get_router("round-robin")
+
+        class _Fleet:
+            n_prompt, n_token = 3, 4
+
+        picks = [r.select_prompt(_Fleet()) for _ in range(6)]
+        assert picks == [0, 1, 2, 0, 1, 2]
+        assert [r.select_token(_Fleet()) for _ in range(5)] == [0, 1, 2, 3, 0]
+
+    def test_fleet_view_read_only_surface(self):
+        cluster = Cluster(ExperimentConfig())
+        fleet = cluster.fleet
+        assert isinstance(fleet, FleetView)
+        assert fleet.n_prompt == 5 and fleet.n_token == 17
+        assert fleet.prompt_depths().shape == (5,)
+        assert fleet.token_loads().shape == (17,)
+        snaps = fleet.token_aging()
+        assert len(snaps) == 17
+        s = snaps[0]
+        assert s.mean_degradation == 0.0  # fresh fleet at t=0
+        assert s.active_cores == cluster.cfg.num_cores
+        assert s.mean_f0 > 0 and s.freq_cv > 0
+
+
+class TestFleetMetrics:
+    def test_per_machine_carbon_aggregation(self):
+        m = run_experiment(ExperimentConfig(rate_rps=40, duration_s=8,
+                                            seed=1))
+        assert len(m.per_machine_carbon) == 22
+        total = sum(e.yearly_kgco2eq for e in m.per_machine_carbon)
+        assert m.fleet_yearly_kgco2eq == pytest.approx(total)
+        assert all(e.yearly_kgco2eq > 0 for e in m.per_machine_carbon)
+        assert m.fleet_degradation_cv > 0
+
+    def test_starved_run_reports_nan_not_perfect_service(self):
+        """No completions must yield NaN latencies and completed=0 — a
+        starved config can never rank as winning a latency sweep."""
+        cfg = ExperimentConfig(duration_s=5.0)
+        cluster = Cluster(cfg)
+        cluster.run([], 5.0)
+        m = collect(cluster, cfg.policy, cfg.num_cores, cfg.rate_rps,
+                    router=cfg.router)
+        assert m.completed == 0
+        assert math.isnan(m.mean_latency_s)
+        assert math.isnan(m.p99_latency_s)
+
+
+class TestSweepGrid:
+    def test_policy_scenario_router_grid(self):
+        """The ROADMAP's third experiment axis: (policy, scenario,
+        router)-keyed grids from one call."""
+        cfg = ExperimentConfig(rate_rps=30, duration_s=6, seed=0)
+        grid = run_policy_sweep(
+            cfg, policies=("linux", "proposed"),
+            scenarios=("conversation-poisson", "conversation-mmpp"),
+            routers=("jsq", "least-aged-cpu"))
+        assert len(grid) == 8
+        for (policy, scenario, router), m in grid.items():
+            assert m.policy == policy
+            assert m.scenario == scenario
+            assert m.router == router
+            assert m.completed > 0
+
+    def test_policy_router_grid_without_scenarios(self):
+        grid = run_policy_sweep(
+            ExperimentConfig(rate_rps=30, duration_s=6, seed=0),
+            policies=("linux",), routers=("jsq", "round-robin"))
+        assert set(grid) == {("linux", "jsq"), ("linux", "round-robin")}
+
+    def test_single_axis_keys_unchanged(self):
+        """routers=None preserves the PR-1/PR-2 key shapes."""
+        cfg = ExperimentConfig(rate_rps=30, duration_s=6, seed=0)
+        by_policy = run_policy_sweep(cfg, policies=("linux",))
+        assert set(by_policy) == {"linux"}
+        by_ps = run_policy_sweep(cfg, policies=("linux",),
+                                 scenarios=("conversation-poisson",))
+        assert set(by_ps) == {("linux", "conversation-poisson")}
