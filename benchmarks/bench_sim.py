@@ -1,0 +1,195 @@
+"""Simulator perf-benchmark harness: events/sec and wall time per
+canonical config, emitted to BENCH_sim.json to seed the repo's perf
+trajectory.
+
+    PYTHONPATH=src python benchmarks/bench_sim.py            # full (~1 min)
+    PYTHONPATH=src python benchmarks/bench_sim.py --smoke    # CI-scale
+
+The committed BASELINE block pins the pre-optimization numbers (PR 4's
+"before", captured at commit 94bd8ac on the same canonical default
+config) so every future run reports an honest end-to-end speedup next
+to its absolute numbers. Wall-time comparisons use the min over runs —
+the least-noise estimator on shared machines.
+
+Bit-exactness is NOT this harness's job: tests/test_perf_bitexact.py
+pins optimized-vs-golden `ExperimentMetrics`; this file only measures.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import statistics
+import time
+
+import numpy as np
+
+from repro.core import CoreManager
+from repro.sim import ExperimentConfig, metrics as metrics_mod
+from repro.sim.cluster import Cluster
+from repro.sim.fleetstate import FleetAgingSettler
+from repro.workloads import get_scenario
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_sim.json")
+# --smoke writes elsewhere by default so a CI-scale run can never
+# clobber the committed full-config record README points at.
+SMOKE_OUT = os.path.join(os.path.dirname(__file__), "..",
+                         "BENCH_sim_smoke.json")
+
+# Pre-PR-4 numbers for the canonical default config (ExperimentConfig()
+# defaults: proposed / jsq / conversation-poisson, 22 machines x 40
+# cores, 120 s @ 60 rps, seed 0), captured at commit 94bd8ac with this
+# harness's timing loop (3 runs, min/median). Events counted by the
+# event loop; the per-event numpy dispatch these numbers price out is
+# exactly what the PR-4 fast paths removed.
+BASELINE = {
+    "captured_at_commit": "94bd8ac",
+    "benchmark": "default-e2e",
+    "runs": 3,
+    "wall_s_min": 12.148,
+    "wall_s_median": 12.839,
+    "events": 140488,
+    "events_per_sec": 11563.0,
+    "completed": 2525,
+}
+
+
+def _run_once(cfg: ExperimentConfig) -> dict:
+    """One timed end-to-end experiment; returns wall/events/completed."""
+    scenario = get_scenario(cfg.scenario, **cfg.scenario_options)
+    trace = scenario.generate(rate_rps=cfg.rate_rps,
+                              duration_s=cfg.duration_s, seed=cfg.seed)
+    t0 = time.perf_counter()
+    cluster = Cluster(cfg)
+    cluster.run(list(trace), cfg.duration_s,
+                sample_period_s=cfg.sample_period_s)
+    wall = time.perf_counter() - t0
+    m = metrics_mod.collect(cluster, cfg.policy, cfg.num_cores,
+                            cfg.rate_rps, scenario=cfg.scenario,
+                            router=cfg.router)
+    return {"wall_s": wall, "events": cluster.queue.processed,
+            "completed": m.completed}
+
+
+def bench_end_to_end(cfg: ExperimentConfig, runs: int) -> dict:
+    walls, events, completed = [], None, None
+    for _ in range(runs):
+        r = _run_once(cfg)
+        walls.append(r["wall_s"])
+        events, completed = r["events"], r["completed"]
+    wall_min = min(walls)
+    return {
+        "runs": runs,
+        "wall_s_min": round(wall_min, 4),
+        "wall_s_median": round(statistics.median(walls), 4),
+        "events": events,
+        "events_per_sec": round(events / wall_min, 1),
+        "completed": completed,
+        "config": {
+            "policy": cfg.policy, "router": cfg.router,
+            "scenario": cfg.scenario, "num_cores": cfg.num_cores,
+            "n_machines": cfg.n_machines, "rate_rps": cfg.rate_rps,
+            "duration_s": cfg.duration_s, "seed": cfg.seed,
+        },
+    }
+
+
+def bench_manager_hot_path(n_ops: int = 20_000) -> dict:
+    """Raw assign/release throughput of one CoreManager (proposed):
+    the per-event cost every simulated CPU task pays."""
+    m = CoreManager(40, policy="proposed", rng=np.random.default_rng(0))
+    t0 = time.perf_counter()
+    t = 0.0
+    for tid in range(n_ops):
+        t += 0.001
+        m.assign(tid, t)
+        m.release(tid, t + 0.0005)
+    wall = time.perf_counter() - t0
+    return {"ops": n_ops, "assign_release_per_sec": round(n_ops / wall, 1)}
+
+
+def bench_fleet_settle(n_machines: int = 22, num_cores: int = 40,
+                       reps: int = 200) -> dict:
+    """Fleet-batched periodic settlement vs n_machines sequential
+    settle_all chains (what the cluster tick used to do)."""
+    def build():
+        ms = [CoreManager(num_cores, policy="linux",
+                          rng=np.random.default_rng(i))
+              for i in range(n_machines)]
+        for i, m in enumerate(ms):       # heterogeneous regimes
+            for tid in range(i % 7):
+                m.assign(tid, 0.0)
+        return ms
+
+    ms = build()
+    t0 = time.perf_counter()
+    for k in range(reps):
+        for m in ms:
+            m.settle_all(float(k + 1))
+    seq = time.perf_counter() - t0
+
+    ms = build()
+    settler = FleetAgingSettler(ms)
+    t0 = time.perf_counter()
+    for k in range(reps):
+        settler.settle(float(k + 1))
+    batched = time.perf_counter() - t0
+    return {"reps": reps, "n_machines": n_machines,
+            "sequential_s": round(seq, 4), "batched_s": round(batched, 4),
+            "speedup": round(seq / batched, 2)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-scale run (short trace, 1 timing run); "
+                    "skips the pinned-baseline speedup comparison")
+    ap.add_argument("--runs", type=int, default=3,
+                    help="timing repetitions for the end-to-end bench")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: repo-root "
+                    "BENCH_sim.json, or BENCH_sim_smoke.json with "
+                    "--smoke)")
+    args = ap.parse_args()
+
+    if args.out is None:
+        args.out = SMOKE_OUT if args.smoke else DEFAULT_OUT
+    if args.smoke:
+        cfg = ExperimentConfig(duration_s=8.0)
+        runs = 1
+    else:
+        cfg = ExperimentConfig()
+        runs = args.runs
+
+    out = {
+        "benchmark": "default-e2e" if not args.smoke else "smoke-e2e",
+        "env": {
+            "python": platform.python_version(),
+            "numpy": np.__version__,
+            "machine": platform.machine(),
+            "cpus": os.cpu_count(),
+        },
+        "current": bench_end_to_end(cfg, runs),
+        "micro": {
+            "manager_hot_path": bench_manager_hot_path(),
+            "fleet_settle": bench_fleet_settle(),
+        },
+    }
+    if not args.smoke:
+        out["baseline"] = BASELINE
+        out["speedup_end_to_end"] = round(
+            BASELINE["wall_s_min"] / out["current"]["wall_s_min"], 2)
+
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")
+    for k, v in out.items():
+        if k != "env":
+            print(f"{k}: {json.dumps(v)}")
+    print(f"wrote {os.path.normpath(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

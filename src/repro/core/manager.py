@@ -16,6 +16,7 @@ change first settles the elapsed interval under the old ADF.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 
 import numpy as np
 
@@ -24,6 +25,9 @@ from repro.core.policies import CorePolicy, CoreView, get_policy
 from repro.core.temperature import CState
 
 OVERSUBSCRIBED = -1  # sentinel core id for tasks that didn't get a core
+
+_ACTIVE = int(CState.ACTIVE)
+_DEEP_IDLE = int(CState.DEEP_IDLE)
 
 
 @dataclasses.dataclass
@@ -48,8 +52,15 @@ class CoreManager:
         rng: np.random.Generator | None = None,
         idling_period_s: float = 1.0,
         policy_opts: dict | None = None,
+        on_promote=None,
     ):
         self.num_cores = num_cores
+        # Called as on_promote(task_id, core, now, speed) whenever a task
+        # leaves the oversubscription queue for a real core, where `speed`
+        # is the promoted core's settled frequency factor — the caller can
+        # recompute the task's remaining duration (the simulator reschedules
+        # its completion event; see `Machine.run_cpu_task`).
+        self.on_promote = on_promote
         self.params = aging_params
         self.idling_period_s = idling_period_s
         self.rng = rng if rng is not None else np.random.default_rng(0)
@@ -63,7 +74,9 @@ class CoreManager:
         self.c_state = np.full(n, CState.ACTIVE, dtype=np.int8)
         self.task_of_core = np.full(n, -1, dtype=np.int64)   # task id or -1
         self.idle_history = np.zeros((n, mapping.IDLE_HISTORY_LEN))
-        self.hist_pos = np.zeros(n, dtype=np.int64)
+        # Per-core write cursor into the idle-history ring (plain ints:
+        # this is pure event-loop bookkeeping, never consumed as an array).
+        self.hist_pos = [0] * n
         self.idle_since = np.zeros(n)        # when core last became unassigned
         self.last_update = np.zeros(n)       # last dvth settlement time
         self.cum_work = np.zeros(n)          # least-aged baseline age proxy
@@ -77,6 +90,42 @@ class CoreManager:
         self.metrics = ManagerMetrics()
         self.now = 0.0
         self._view = CoreView(self)
+
+        # ---- event-loop fast-path state (see "incremental indices") ---- #
+        # Per-core idle score kept in lockstep with `idle_history`
+        # (bit-identical to `mapping.idle_scores`, see `_record_idle_end`).
+        self.idle_score = np.zeros(n)
+        # Lazy max-heap over free working-set cores: entries are
+        # (-idle_score, core, stamp). `_stamp[core]` increments on every
+        # eligibility transition (assign / release / gate / wake), so any
+        # entry whose stamp is stale is garbage and is dropped at peek
+        # time. Ordering matches `mapping.select_core` exactly: highest
+        # score first, ties to the lowest core index.
+        self._free_heap: list[tuple[float, int, int]] = \
+            [(-0.0, i, 0) for i in range(n)]
+        self._stamp: list[int] = [0] * n
+        # Cores currently running a task (the oversubscribed-speed bound
+        # only needs these; maintained O(1) per assign/release).
+        self._busy_cores: set[int] = set()
+        # Regime ADFs precomputed once per manager. `_adf_settle` mirrors
+        # the scalar settle path (`K * adf_unscaled_cached`); the busy
+        # constant mirrors the vectorized `aging.adf` the oversubscribed
+        # bound historically flowed through — the two derivations differ
+        # in multiplication order and may differ in the last ulp, so each
+        # fast path keeps its own to stay bit-exact.
+        p = self.params
+        self._adf_settle = tuple(
+            tuple(p.K * aging.adf_unscaled_cached(
+                p, temperature.core_temperature_c(CState(cs), alloc),
+                temperature.core_stress(CState(cs), alloc))
+                for alloc in (False, True))
+            for cs in (_ACTIVE, _DEEP_IDLE))
+        self._adf_busy_vec = float(aging.adf(
+            p, np.float64(temperature.TEMP_ACTIVE_ALLOCATED_C),
+            np.float64(temperature.STRESS_ACTIVE)))
+        self._inv_n = 1.0 / p.n
+        self._n_exp = p.n
+        self._headroom = p.headroom
 
     @staticmethod
     def _resolve_policy(policy, policy_opts) -> CorePolicy:
@@ -101,38 +150,119 @@ class CoreManager:
     # ------------------------------------------------------------------ #
     # aging bookkeeping
     # ------------------------------------------------------------------ #
-    def _regime(self, i: int) -> tuple[float, float]:
-        """(temperature C, stress Y) of core i's current regime."""
-        cs = CState(int(self.c_state[i]))
-        allocated = self.task_of_core[i] >= 0
-        return (temperature.core_temperature_c(cs, allocated),
-                temperature.core_stress(cs, allocated))
-
     def _settle(self, i: int, now: float) -> None:
         """Advance core i's dVth from last_update to `now` under its
-        current regime. Must be called BEFORE any regime change."""
-        tau = now - self.last_update[i]
+        current regime. Must be called BEFORE any regime change.
+
+        numpy-free scalar path: the regime ADF comes from the per-manager
+        `_adf_settle` table (same value `K * adf_unscaled_cached` returned
+        per call before, minus the enum + dict-hash round trips), and the
+        recursive update is `aging.advance_dvth_scalar` inlined on plain
+        floats (`.item()` reads skip numpy-scalar boxing)."""
+        tau = now - self.last_update.item(i)
         if tau > 0.0:
-            t_c, y = self._regime(i)
-            a = self.params.K * aging.adf_unscaled_cached(self.params, t_c, y)
-            self.dvth[i] = aging.advance_dvth_scalar(
-                self.params, float(self.dvth[i]), a, tau)
+            a = self._adf_settle[self.c_state.item(i)][
+                1 if self.task_of_core.item(i) >= 0 else 0]
+            if a > 0.0:
+                d = self.dvth.item(i)
+                self.dvth[i] = a * ((d / a) ** self._inv_n + tau) \
+                    ** self._n_exp
             self.last_update[i] = now
+
+    # ------------------------------------------------------------------ #
+    # incremental indices (event-loop fast paths)
+    # ------------------------------------------------------------------ #
+    def _record_idle_end(self, core: int, idle_duration: float) -> None:
+        """`mapping.record_idle_end` + incremental idle-score update."""
+        h = self.idle_history
+        pos = self.hist_pos[core]
+        h[core, pos % mapping.IDLE_HISTORY_LEN] = idle_duration
+        self.hist_pos[core] = pos + 1
+        # Recompute the row's score with numpy's pairwise-summation tree
+        # for 8 elements, so the cached score stays bit-identical to
+        # `mapping.idle_scores` (a plain left-to-right sum would drift
+        # by ulps and could flip argmax ties).
+        if mapping.IDLE_HISTORY_LEN == 8:
+            r0, r1, r2, r3, r4, r5, r6, r7 = h[core].tolist()
+            self.idle_score[core] = (
+                ((r0 + r1) + (r2 + r3)) + ((r4 + r5) + (r6 + r7)))
+        else:
+            self.idle_score[core] = float(h[core].sum())
+
+    def _peek_best_free(self) -> int:
+        """Free working-set core with the highest idle score, or -1.
+
+        Equivalent to `mapping.select_core(active, assigned,
+        idle_history)` — including first-index tie-breaking — but served
+        from the lazy heap in O(log n) amortized. Stale entries (stamp
+        mismatch, or state flipped behind the manager's back) are
+        discarded on the way; the returned core stays in the heap until
+        an eligibility transition invalidates it."""
+        h = self._free_heap
+        stamp = self._stamp
+        c_state = self.c_state
+        task_of_core = self.task_of_core
+        while h:
+            _, core, st = h[0]
+            if (st != stamp[core] or c_state.item(core) != _ACTIVE
+                    or task_of_core.item(core) >= 0):
+                heapq.heappop(h)
+                continue
+            return core
+        return -1
+
+    def _push_free(self, core: int) -> None:
+        """Core just became eligible (free + working set): index it."""
+        stamp = self._stamp[core] + 1
+        self._stamp[core] = stamp
+        heapq.heappush(self._free_heap,
+                       (-self.idle_score.item(core), core, stamp))
+
+    def _mark_busy(self, core: int, task_id: int, now: float) -> None:
+        """Shared assign/promote tail: settle the ended idle window and
+        hand the core to `task_id` (invalidates its free-heap entry)."""
+        idle_dur = now - self.idle_since.item(core)
+        self._record_idle_end(core, idle_dur if idle_dur > 0.0 else 0.0)
+        self._settle(core, now)          # settle idle regime
+        self.task_of_core[core] = task_id
+        self.core_of_task[task_id] = core
+        self.task_start[task_id] = now
+        self._stamp[core] += 1
+        self._busy_cores.add(core)
+
+    def _busy_max_frequency(self, now: float) -> float:
+        """Settled frequency of the fastest *busy* core at `now` — the
+        oversubscribed-task speed bound — without building fleet-wide
+        settled arrays. Bit-identical to masking
+        `aging.frequency(params, f0, _settled_dvth(now))` to busy cores
+        (pinned by tests/test_fastpath.py): busy cores all share the
+        (C0, allocated) regime, so one vectorized-derivation ADF
+        constant plus the same ufunc chain over just the busy *subset*
+        reproduces the old full-fleet computation. (A pure-scalar loop
+        would not: numpy's array `**` and libm's scalar `**` disagree by
+        an ulp on some inputs, so the advance must stay a ufunc.)"""
+        if not self._busy_cores:
+            # Pure promotion race: nothing busy, fall back to the
+            # fleet-wide settled maximum (rare; keep the vectorized path).
+            freqs = aging.frequency(self.params, self.f0,
+                                    self._settled_dvth(now))
+            return float(np.max(freqs))
+        idx = np.fromiter(self._busy_cores, dtype=np.intp,
+                          count=len(self._busy_cores))
+        a = self._adf_busy_vec
+        tau = np.maximum(now - self.last_update[idx], 0.0)
+        d = self.dvth[idx]
+        new = a * ((d / a) ** self._inv_n + tau) ** self._n_exp
+        settled = np.where(tau > 0.0, new, d)
+        return float(np.max(self.f0[idx]
+                            * (1.0 - settled / self._headroom)))
 
     def _settled_dvth(self, now: float) -> np.ndarray:
         """Every core's dVth advanced to `now` under its current regime,
         WITHOUT mutating state (pure; also backs `CoreView.dvth_now`)."""
         tau = np.maximum(now - self.last_update, 0.0)
-        allocated = self.task_of_core >= 0
-        active = self.c_state == CState.ACTIVE
-        temps = np.where(
-            active,
-            np.where(allocated, temperature.TEMP_ACTIVE_ALLOCATED_C,
-                     temperature.TEMP_ACTIVE_UNALLOCATED_C),
-            temperature.TEMP_DEEP_IDLE_C,
-        )
-        stress = np.where(active, temperature.STRESS_ACTIVE,
-                          temperature.STRESS_DEEP_IDLE)
+        temps, stress = temperature.regime_arrays(self.c_state,
+                                                  self.task_of_core >= 0)
         adf_vals = aging.adf(self.params, temps, stress)
         return aging.advance_dvth(self.params, self.dvth, adf_vals, tau)
 
@@ -156,7 +286,8 @@ class CoreManager:
         simulator should apply to the task duration; oversubscribed tasks
         additionally share cores, handled by the caller via load factor.
         """
-        self.now = max(self.now, now)
+        if now > self.now:
+            self.now = now
         self.metrics.assigns += 1
         core = self.policy.select_core(self._view)
 
@@ -172,25 +303,17 @@ class CoreManager:
             # executing anything and must not inflate the bound. Only
             # when no core is busy at all (pure promotion races) fall
             # back to the fleet-wide settled maximum.
-            freqs = aging.frequency(self.params, self.f0,
-                                    self._settled_dvth(now))
-            busy = self.task_of_core >= 0
-            pool = freqs[busy] if busy.any() else freqs
-            return float(np.max(pool))
+            return self._busy_max_frequency(now)
 
         # End the core's idle period -> record idle duration (Alg. 1 input).
-        idle_dur = now - self.idle_since[core]
-        mapping.record_idle_end(self.idle_history, self.hist_pos, core,
-                                max(idle_dur, 0.0))
-        self._settle(core, now)          # settle idle regime
-        self.task_of_core[core] = task_id
-        self.core_of_task[task_id] = core
-        self.task_start[task_id] = now
-        return aging.frequency_scalar(self.params, float(self.f0[core]),
-                                      float(self.dvth[core]))
+        self._mark_busy(core, task_id, now)
+        # aging.frequency_scalar inlined (Eq. 1) on plain floats.
+        return self.f0.item(core) * (1.0 - self.dvth.item(core)
+                                     / self._headroom)
 
     def release(self, task_id: int, now: float) -> None:
-        self.now = max(self.now, now)
+        if now > self.now:
+            self.now = now
         core = self.core_of_task.pop(task_id, None)
         start = self.task_start.pop(task_id, now)
         if core is None:
@@ -198,14 +321,18 @@ class CoreManager:
         if core == OVERSUBSCRIBED:
             self.oversub_tasks.discard(task_id)
             self._account_oversub(task_id, now)
-            self._promote_oversubscribed(now)
+            if self.oversub_tasks:
+                self._promote_oversubscribed(now)
             return
         self._settle(core, now)          # settle allocated regime
         self.cum_work[core] += now - start
         self.task_of_core[core] = -1
+        self._busy_cores.discard(core)
         self.idle_since[core] = now
+        self._push_free(core)
         self.policy.on_release(self._view, core)
-        self._promote_oversubscribed(now)
+        if self.oversub_tasks:
+            self._promote_oversubscribed(now)
 
     def _account_oversub(self, task_id: int, now: float,
                          final: bool = True) -> None:
@@ -226,23 +353,17 @@ class CoreManager:
         exactly one candidate core — the one that just freed.
         """
         while self.oversub_tasks:
-            active_mask = self.c_state == CState.ACTIVE
-            assigned_mask = self.task_of_core >= 0
-            free = active_mask & ~assigned_mask
-            if not free.any():
+            core = self._peek_best_free()
+            if core < 0:
                 return
             task_id = min(self.oversub_tasks)  # FIFO by id (ids are ordered)
             self.oversub_tasks.discard(task_id)
             self._account_oversub(task_id, now)
-            core = mapping.select_core(active_mask, assigned_mask,
-                                       self.idle_history)
-            idle_dur = now - self.idle_since[core]
-            mapping.record_idle_end(self.idle_history, self.hist_pos, core,
-                                    max(idle_dur, 0.0))
-            self._settle(core, now)
-            self.task_of_core[core] = task_id
-            self.core_of_task[task_id] = core
-            self.task_start[task_id] = now
+            self._mark_busy(core, task_id, now)
+            if self.on_promote is not None:
+                speed = aging.frequency_scalar(
+                    self.params, float(self.f0[core]), float(self.dvth[core]))
+                self.on_promote(task_id, core, now, speed)
 
     # ------------------------------------------------------------------ #
     # periodic control + metrics
@@ -280,13 +401,16 @@ class CoreManager:
         for i in corr.to_idle:
             # settle_all already brought core i to `now`; close its idle
             # window and power-gate.
+            i = int(i)
             idle_dur = now - self.idle_since[i]
-            mapping.record_idle_end(self.idle_history, self.hist_pos, int(i),
-                                    max(idle_dur, 0.0))
+            self._record_idle_end(i, idle_dur if idle_dur > 0.0 else 0.0)
             self.c_state[i] = CState.DEEP_IDLE
+            self._stamp[i] += 1          # no longer in the free-core heap
         for i in corr.to_wake:
+            i = int(i)
             self.c_state[i] = CState.ACTIVE
             self.idle_since[i] = now
+            self._push_free(i)
         if len(corr.to_wake):
             self._promote_oversubscribed(now)
 

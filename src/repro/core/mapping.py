@@ -5,6 +5,12 @@ assigned, the core with the highest *idle score* — the sum of its last
 eight idle durations (the same rolling window the Linux cpuidle governor
 keeps).  A mostly-idle core is an inexpensive estimate of a lesser-aged
 core, so stress is distributed least-aged-first without CPU profiling.
+
+These functions are the *reference* implementation of Algorithm 1: the
+event-loop hot path in `CoreManager` answers the same argmax from an
+incrementally-maintained idle-score array + lazy free-core heap
+(`CoreView.best_idle_core`), and tests/test_fastpath.py pins the two
+against each other bit-exactly.
 """
 from __future__ import annotations
 

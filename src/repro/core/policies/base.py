@@ -108,6 +108,15 @@ class CoreView:
         return self._m.rng
 
     # -- derived ------------------------------------------------------- #
+    def best_idle_core(self) -> int:
+        """Free working-set core with the highest idle score, or -1 —
+        Algorithm 1's argmax, answered from the manager's incremental
+        free-core index instead of a fresh masked argmax. Equivalent to
+        `mapping.select_core(active_mask, assigned_mask, idle_history)`
+        including first-index tie-breaking (pinned by
+        tests/test_fastpath.py); read-only from the policy's view."""
+        return self._m._peek_best_free()
+
     def dvth_now(self) -> np.ndarray:
         """(N,) float — dVth settled to `now` without mutating manager
         state. Models reading accurate aging-sensor data (paper §5)."""

@@ -1,7 +1,7 @@
 """The paper's technique: Algorithm 1 mapping + Algorithm 2 idling."""
 from __future__ import annotations
 
-from repro.core import idling, mapping
+from repro.core import idling
 from repro.core.policies.base import CorePolicy, CoreView, IdleCorrection
 from repro.core.policies.registry import register_policy
 
@@ -18,8 +18,11 @@ class ProposedPolicy(CorePolicy):
     """
 
     def select_core(self, view: CoreView) -> int:
-        return mapping.select_core(view.active_mask, view.assigned_mask,
-                                   view.idle_history)
+        # Algorithm 1's masked argmax, answered by the manager's
+        # incremental free-core index (same selection as
+        # `mapping.select_core(view.active_mask, view.assigned_mask,
+        # view.idle_history)`, without rebuilding masks per task).
+        return view.best_idle_core()
 
     def periodic(self, view: CoreView) -> IdleCorrection | None:
         active_mask = view.active_mask

@@ -10,50 +10,39 @@ Names are case-insensitive and underscore/hyphen-insensitive, so
 "least-aged", "least_aged" and "LEAST_AGED" all resolve to the same
 policy. Every `get_policy` call returns a NEW instance: policies carry
 per-server state and must not be shared across managers.
+
+The mechanics live in the shared `repro.registry.Registry` (one
+implementation for the policy / scenario / router axes).
 """
 from __future__ import annotations
 
 from repro.core.policies.base import CorePolicy
+from repro.registry import Registry, canonical_name
 
-_REGISTRY: dict[str, type[CorePolicy]] = {}
+_POLICIES = Registry(
+    noun="policy", kind="core policy", decorator="register_policy",
+    expects="CorePolicy subclass",
+    check=lambda cls: isinstance(cls, type) and issubclass(cls, CorePolicy),
+)
+#: historical module-level alias (tests clean up through it)
+_REGISTRY = _POLICIES.store
 
 
 def canonical_policy_name(name: str) -> str:
     """Normalize a user-supplied policy key ("least_aged" -> "least-aged")."""
-    return str(name).strip().lower().replace("_", "-")
+    return canonical_name(name)
 
 
 def register_policy(name: str):
     """Class decorator: register a `CorePolicy` subclass under `name`."""
-    key = canonical_policy_name(name)
-
-    def deco(cls: type[CorePolicy]) -> type[CorePolicy]:
-        if not (isinstance(cls, type) and issubclass(cls, CorePolicy)):
-            raise TypeError(f"@register_policy({name!r}) expects a "
-                            f"CorePolicy subclass, got {cls!r}")
-        prev = _REGISTRY.get(key)
-        if prev is not None and prev is not cls:
-            raise ValueError(f"policy name {key!r} already registered "
-                             f"to {prev.__name__}")
-        cls.name = key
-        _REGISTRY[key] = cls
-        return cls
-
-    return deco
+    return _POLICIES.register(name)
 
 
 def get_policy(name: str, **opts) -> CorePolicy:
     """Instantiate the policy registered under `name` with `opts`."""
-    key = canonical_policy_name(name)
-    try:
-        cls = _REGISTRY[key]
-    except KeyError:
-        raise KeyError(
-            f"unknown core policy {name!r}; available: "
-            f"{', '.join(available_policies())}") from None
-    return cls(**opts)
+    return _POLICIES.get(name, **opts)
 
 
 def available_policies() -> tuple[str, ...]:
     """Sorted canonical names of every registered policy."""
-    return tuple(sorted(_REGISTRY))
+    return _POLICIES.available()

@@ -15,6 +15,8 @@ from __future__ import annotations
 
 import enum
 
+import numpy as np
+
 
 class CState(enum.IntEnum):
     ACTIVE = 0      # C0
@@ -38,3 +40,25 @@ def core_temperature_c(c_state: CState, task_allocated: bool) -> float:
 def core_stress(c_state: CState, task_allocated: bool) -> float:
     del task_allocated  # worst-case: active cores always stressed (OS tasks)
     return STRESS_DEEP_IDLE if c_state == CState.DEEP_IDLE else STRESS_ACTIVE
+
+
+def regime_arrays(c_state, task_allocated):
+    """Vectorized Table-1 regimes: (temps_C, stress) arrays from per-core
+    C-states and allocation flags. Both `CoreManager._settled_dvth` and
+    the fleet-batched settler (`repro.sim.fleetstate`) derive regimes
+    through this one helper — their outputs must stay byte-identical for
+    batched settlement to remain bit-exact with per-machine settlement.
+
+    Args:
+      c_state:        (...,) int array of `CState` values.
+      task_allocated: (...,) bool array — core currently runs a task.
+    """
+    active = np.asarray(c_state) == CState.ACTIVE
+    temps = np.where(
+        active,
+        np.where(task_allocated, TEMP_ACTIVE_ALLOCATED_C,
+                 TEMP_ACTIVE_UNALLOCATED_C),
+        TEMP_DEEP_IDLE_C,
+    )
+    stress = np.where(active, STRESS_ACTIVE, STRESS_DEEP_IDLE)
+    return temps, stress

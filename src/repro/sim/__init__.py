@@ -7,6 +7,7 @@ Workloads come from the pluggable `repro.workloads` scenario registry;
 from repro.sim.cluster import Cluster, Machine, PromptInstance, TokenInstance
 from repro.sim.config import ExperimentConfig
 from repro.sim.events import EventQueue
+from repro.sim.fleetstate import FleetAgingSettler, settle_fleet
 from repro.sim.metrics import ExperimentMetrics, carbon_comparison, collect
 from repro.sim.routing import (ClusterRouter, FleetView, MachineAging,
                                available_routers, canonical_router_name,
@@ -18,7 +19,8 @@ from repro.sim.trace import Request, TraceConfig, generate, trace_stats
 
 __all__ = [
     "Cluster", "Machine", "PromptInstance", "TokenInstance", "EventQueue",
-    "ExperimentConfig", "ExperimentMetrics", "carbon_comparison", "collect",
+    "ExperimentConfig", "ExperimentMetrics", "FleetAgingSettler",
+    "settle_fleet", "carbon_comparison", "collect",
     "ClusterRouter", "FleetView", "MachineAging", "available_routers",
     "canonical_router_name", "get_router", "register_router",
     "DEFAULT_SWEEP", "run_experiment", "run_policy_sweep", "CPUTask",

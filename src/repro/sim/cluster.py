@@ -15,15 +15,19 @@ splitwise-sim models.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import heapq
+from typing import Callable
 
 import numpy as np
 
 from repro.core import OVERSUBSCRIBED, CoreManager
 from repro.sim.config import ExperimentConfig
 from repro.sim.events import EventQueue
+from repro.sim.fleetstate import FleetAgingSettler
 from repro.sim.routing import FleetView, get_router
-from repro.sim.tasks import TaskIdAllocator
+from repro.sim.tasks import TASK_DURATIONS_S, TaskIdAllocator
 from repro.workloads import Request
 
 # ----------------------------- GPU model ------------------------------ #
@@ -63,28 +67,70 @@ class Machine:
             policy_opts=cfg.policy_options,
             rng=np.random.default_rng(cfg.seed * 1000 + machine_id),
             idling_period_s=cfg.idling_period_s,
+            on_promote=self._on_promote,
         )
         self.running_cpu_tasks = 0
         self.task_count_samples: list[int] = []
+        # Oversubscribed tasks still in flight, keyed by task id:
+        # [work_left (nominal s), rate (work/s), t_progress, gen, on_done].
+        # A promotion reschedules the completion event; `gen` marks the
+        # superseded event stale (the EventQueue has no cancellation).
+        self._oversub_inflight: dict[int, list] = {}
 
     def run_cpu_task(self, name: str, on_done=None) -> None:
         """Spawn a Table-2 CPU task; completion latency reflects core
-        aging (degraded frequency) and oversubscription time-sharing."""
-        task = self.task_ids.new(name)
-        now = self.queue.now
-        speed = self.manager.assign(task.task_id, now)
-        dur = task.duration_s / max(speed, 1e-6)
-        if self.manager.core_of_task.get(task.task_id) == OVERSUBSCRIBED:
-            dur *= OVERSUB_SLOWDOWN
-        self.running_cpu_tasks += 1
+        aging (degraded frequency) and oversubscription time-sharing.
 
+        An oversubscribed task progresses at the time-shared rate until
+        the manager promotes it onto a freed core, at which point its
+        remaining duration is recomputed from the promoted core's
+        settled frequency (`_on_promote`)."""
+        tid = self.task_ids.next_id()
+        work = TASK_DURATIONS_S[name]
+        now = self.queue.now
+        speed = self.manager.assign(tid, now)
+        rate = max(speed, 1e-6)
+        dur = work / rate
+        tracked = self.manager.core_of_task.get(tid) == OVERSUBSCRIBED
+        if tracked:
+            dur *= OVERSUB_SLOWDOWN
+            self._oversub_inflight[tid] = [
+                work, rate / OVERSUB_SLOWDOWN, now, 0, on_done]
+        self.running_cpu_tasks += 1
+        self._schedule_finish(tid, dur, 0, on_done, tracked)
+
+    def _schedule_finish(self, tid: int, dur: float, gen: int,
+                         on_done, tracked: bool) -> None:
         def _finish():
-            self.manager.release(task.task_id, self.queue.now)
+            if tracked:
+                # Tracked (once-oversubscribed) tasks may have two finish
+                # events in flight: a missing entry means the current-gen
+                # event already completed the task, a gen mismatch means
+                # a promotion superseded this event — either way, stale.
+                st = self._oversub_inflight.get(tid)
+                if st is None or st[3] != gen:
+                    return
+                del self._oversub_inflight[tid]
+            self.manager.release(tid, self.queue.now)
             self.running_cpu_tasks -= 1
             if on_done is not None:
                 on_done()
 
         self.queue.schedule_in(dur, _finish)
+
+    def _on_promote(self, tid: int, core: int, now: float,
+                    speed: float) -> None:
+        """Manager moved `tid` from the oversubscription queue onto
+        `core`: bank the progress made at the old time-shared rate and
+        reschedule completion at the promoted core's settled speed."""
+        st = self._oversub_inflight.get(tid)
+        if st is None:
+            return
+        work_left, rate, t_progress, gen, on_done = st
+        work_left = max(work_left - (now - t_progress) * rate, 0.0)
+        rate = max(speed, 1e-6)
+        st[:] = [work_left, rate, now, gen + 1, on_done]
+        self._schedule_finish(tid, work_left / rate, gen + 1, on_done, True)
 
 
 class PromptInstance:
@@ -92,7 +138,10 @@ class PromptInstance:
 
     def __init__(self, machine: Machine):
         self.machine = machine
-        self.queue: list[RequestState] = []
+        # FIFO of admitted-but-not-started prefills; popleft() is O(1)
+        # where list.pop(0) was O(n) under queueing bursts.
+        self.queue: collections.deque[tuple[RequestState, Callable]] = \
+            collections.deque()
         self.busy = False
 
     def enqueue(self, rs: RequestState, on_prefill_done) -> None:
@@ -111,7 +160,7 @@ class PromptInstance:
         if self.busy or not self.queue:
             return
         self.busy = True
-        rs, cb = self.queue.pop(0)
+        rs, cb = self.queue.popleft()
         m = self.machine
         gpu_time = PREFILL_BASE_S + PREFILL_PER_TOKEN_S * rs.req.input_tokens
 
@@ -128,14 +177,28 @@ class PromptInstance:
 
 
 class TokenInstance:
-    """Decode-phase worker with ORCA iteration-level continuous batching."""
+    """Decode-phase worker with ORCA iteration-level continuous batching.
+
+    Completion detection is O(1) per iteration: instead of decrementing
+    every batched request's token counter each pass, a request joining
+    the batch is pushed onto a min-heap keyed by the absolute iteration
+    number it finishes at (continuous batching never evicts, so that
+    number is fixed on admission). Iterations that complete nothing —
+    the overwhelming majority at ~200 output tokens per request — skip
+    the batch scan entirely. Completion *order* matches the old per-pass
+    scan exactly: ties pop in admission order.
+    """
 
     def __init__(self, machine: Machine):
         self.machine = machine
         self.active: list[RequestState] = []
-        self.pending: list[RequestState] = []
+        self.pending: collections.deque[RequestState] = collections.deque()
         self.iterating = False
         self.on_request_done = None
+        self._iter_count = 0
+        self._finish_heap: list[tuple[int, int, RequestState]] = []
+        self._admit_seq = 0
+        self._gpu_time = 0.0
 
     @property
     def load(self) -> int:
@@ -158,33 +221,43 @@ class TokenInstance:
             return
         # admit pending up to batch limit
         while self.pending and len(self.active) < MAX_DECODE_BATCH:
-            self.active.append(self.pending.pop(0))
+            rs = self.pending.popleft()
+            self.active.append(rs)
+            self._admit_seq += 1
+            heapq.heappush(self._finish_heap,
+                           (self._iter_count + rs.remaining,
+                            self._admit_seq, rs))
         if not self.active:
             return
         self.iterating = True
-        m = self.machine
-        batch = len(self.active)
-        gpu_time = DECODE_ITER_BASE_S + DECODE_ITER_PER_REQ_S * batch
+        self._gpu_time = (DECODE_ITER_BASE_S
+                          + DECODE_ITER_PER_REQ_S * len(self.active))
+        # ORCAInstance.start_iteration on the host, then the GPU pass.
+        self.machine.run_cpu_task("start_iteration", self._gpu_pass)
 
-        def iteration_done():
+    def _gpu_pass(self) -> None:
+        self.machine.queue.schedule_in(self._gpu_time, self._iteration_done)
+
+    def _iteration_done(self) -> None:
+        m = self.machine
+        self._iter_count += 1
+        fh = self._finish_heap
+        if fh and fh[0][0] <= self._iter_count:
             done_now = []
-            for rs in self.active:
-                rs.remaining -= 1
-                if rs.remaining <= 0:
-                    done_now.append(rs)
+            while fh and fh[0][0] <= self._iter_count:
+                done_now.append(heapq.heappop(fh)[2])
+            done_ids = {id(rs) for rs in done_now}
+            self.active = [rs for rs in self.active
+                           if id(rs) not in done_ids]
             for rs in done_now:
-                self.active.remove(rs)
+                rs.remaining = 0
                 rs.t_done = m.queue.now
                 m.run_cpu_task("free_memory")
                 m.run_cpu_task("finish_request", (
                     (lambda r=rs: self.on_request_done(r))
                     if self.on_request_done else None))
-            self.iterating = False
-            self._maybe_iterate()
-
-        # ORCAInstance.start_iteration on the host, then the GPU pass.
-        m.run_cpu_task("start_iteration", lambda: m.queue.schedule_in(
-            gpu_time, iteration_done))
+        self.iterating = False
+        self._maybe_iterate()
 
 
 class Cluster:
@@ -215,6 +288,10 @@ class Cluster:
         self.router = get_router(cfg.router, **cfg.router_options)
         self.router_rng = np.random.default_rng(cfg.seed * 1000 + 999)
         self.fleet = FleetView(self)
+        # Periodic ticks settle all machines' cores through one stacked
+        # advance (numpy backend: bit-identical to per-machine settle_all).
+        self.fleet_settler = FleetAgingSettler(
+            [m.manager for m in self.machines])
 
     # ----------------------- scheduling policy ------------------------ #
     def _route(self, select, n: int, kind: str) -> int:
@@ -251,6 +328,10 @@ class Cluster:
         period = self.machines[0].manager.idling_period_s
 
         def periodic(t=[0.0]):
+            # One fleet-batched settlement instead of n_machines
+            # sequential settle_all chains; each manager's periodic then
+            # sees fully-settled state (its own settle_all early-outs).
+            self.fleet_settler.settle(self.queue.now)
             for m in self.machines:
                 m.manager.periodic(self.queue.now)
             t[0] += period

@@ -14,6 +14,7 @@ class EventQueue:
         self._heap: list = []
         self._counter = itertools.count()
         self.now = 0.0
+        self.processed = 0  # events executed (perf observability)
 
     def schedule(self, time: float, fn: Callable[[], None]) -> None:
         if time < self.now - 1e-12:
@@ -21,13 +22,23 @@ class EventQueue:
         heapq.heappush(self._heap, (time, next(self._counter), fn))
 
     def schedule_in(self, delay: float, fn: Callable[[], None]) -> None:
-        self.schedule(self.now + max(delay, 0.0), fn)
+        # Inlined `schedule` (this is the event loop's hottest producer):
+        # now + max(delay, 0) can never land in the past.
+        heapq.heappush(
+            self._heap,
+            (self.now + (delay if delay > 0.0 else 0.0),
+             next(self._counter), fn))
 
     def run_until(self, t_end: float) -> None:
-        while self._heap and self._heap[0][0] <= t_end:
-            time, _, fn = heapq.heappop(self._heap)
+        heap = self._heap
+        pop = heapq.heappop
+        n = 0
+        while heap and heap[0][0] <= t_end:
+            time, _, fn = pop(heap)
             self.now = time
             fn()
+            n += 1
+        self.processed += n
         self.now = max(self.now, t_end)
 
     def __len__(self) -> int:

@@ -42,6 +42,7 @@ from typing import ClassVar
 import numpy as np
 
 from repro.core import aging, carbon, temperature
+from repro.registry import Registry, canonical_name
 
 
 # --------------------------------------------------------------------- #
@@ -167,48 +168,36 @@ class ClusterRouter:
         return f"{type(self).__name__}(name={self.name!r})"
 
 
-_REGISTRY: dict[str, type[ClusterRouter]] = {}
+# Shared registry mechanics (`repro.registry.Registry`) — one
+# implementation for the policy / scenario / router axes.
+_ROUTERS = Registry(
+    noun="router", kind="cluster router", decorator="register_router",
+    expects="ClusterRouter subclass",
+    check=lambda cls: isinstance(cls, type) and issubclass(cls,
+                                                           ClusterRouter),
+)
+#: historical module-level alias (tests clean up through it)
+_REGISTRY = _ROUTERS.store
 
 
 def canonical_router_name(name: str) -> str:
     """Normalize a user-supplied router key ("Power_Of_Two" style)."""
-    return str(name).strip().lower().replace("_", "-")
+    return canonical_name(name)
 
 
 def register_router(name: str):
     """Class decorator: register a `ClusterRouter` subclass under `name`."""
-    key = canonical_router_name(name)
-
-    def deco(cls: type[ClusterRouter]) -> type[ClusterRouter]:
-        if not (isinstance(cls, type) and issubclass(cls, ClusterRouter)):
-            raise TypeError(f"@register_router({name!r}) expects a "
-                            f"ClusterRouter subclass, got {cls!r}")
-        prev = _REGISTRY.get(key)
-        if prev is not None and prev is not cls:
-            raise ValueError(f"router name {key!r} already registered "
-                             f"to {prev.__name__}")
-        cls.name = key
-        _REGISTRY[key] = cls
-        return cls
-
-    return deco
+    return _ROUTERS.register(name)
 
 
 def get_router(name: str, **opts) -> ClusterRouter:
     """Instantiate the router registered under `name` with `opts`."""
-    key = canonical_router_name(name)
-    try:
-        cls = _REGISTRY[key]
-    except KeyError:
-        raise KeyError(
-            f"unknown cluster router {name!r}; available: "
-            f"{', '.join(available_routers())}") from None
-    return cls(**opts)
+    return _ROUTERS.get(name, **opts)
 
 
 def available_routers() -> tuple[str, ...]:
     """Sorted canonical names of every registered router."""
-    return tuple(sorted(_REGISTRY))
+    return _ROUTERS.available()
 
 
 # --------------------------------------------------------------------- #

@@ -57,6 +57,7 @@ def run_policy_sweep(
     policies=DEFAULT_SWEEP,
     scenarios=None,
     routers=None,
+    parallel: int | None = None,
 ) -> dict:
     """Run the same experiment across policies (x scenarios x routers).
 
@@ -68,12 +69,25 @@ def run_policy_sweep(
     `cfg.policy_opts` / `cfg.scenario_opts` / `cfg.router_opts` only
     apply to the sweep entries matching `cfg.policy` / `cfg.scenario` /
     `cfg.router`.
+
+    `parallel=N` fans the grid's cells across a process pool of N
+    workers. Every cell is an independent simulation whose seeding is
+    carried entirely by its frozen `ExperimentConfig` (each worker
+    re-derives all RNG streams from `cell_cfg.seed`), so the result
+    dict is identical to the serial sweep — same keys, same metrics —
+    regardless of worker count or completion order (pinned by
+    tests/test_perf_bitexact.py). One caveat: workers resolve registry
+    names on import, so custom policies/scenarios/routers registered at
+    runtime (a notebook cell, an `if __name__ == "__main__"` block) are
+    only visible to workers under the `fork` start method (Linux
+    default); under `spawn` (macOS/Windows default) register them in an
+    imported module, or run serially.
     """
     if cfg is None:
         cfg = ExperimentConfig()
     scenario_axis = scenarios is not None
     router_axis = routers is not None
-    out = {}
+    cells: list[tuple[object, ExperimentConfig]] = []
     for s in (scenarios if scenario_axis else (cfg.scenario,)):
         s_name = canonical_scenario_name(s)
         s_cfg = cfg if s_name == cfg.scenario else cfg.with_scenario(s_name)
@@ -86,9 +100,17 @@ def run_policy_sweep(
                 key = ((run_cfg.policy,)
                        + ((s_name,) if scenario_axis else ())
                        + ((r_name,) if router_axis else ()))
-                out[key if len(key) > 1 else key[0]] = \
-                    run_experiment(run_cfg)
-    return out
+                cells.append((key if len(key) > 1 else key[0], run_cfg))
+    if parallel is not None and int(parallel) > 1 and len(cells) > 1:
+        import concurrent.futures
+
+        with concurrent.futures.ProcessPoolExecutor(
+                max_workers=int(parallel)) as pool:
+            # `map` preserves submission order, so keys zip back exactly.
+            results = list(pool.map(run_experiment,
+                                    [c for _, c in cells]))
+        return dict(zip([k for k, _ in cells], results))
+    return {key: run_experiment(run_cfg) for key, run_cfg in cells}
 
 
 def _with_policy(cfg: ExperimentConfig, policy) -> ExperimentConfig:

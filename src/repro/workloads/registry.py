@@ -10,55 +10,48 @@
 Names are case-insensitive and underscore/hyphen-insensitive. Factories
 (not instances) are registered so every `get_scenario` call can take
 constructor options and returns an independent scenario object.
+
+The mechanics live in the shared `repro.registry.Registry` (one
+implementation for the policy / scenario / router axes).
 """
 from __future__ import annotations
 
-from typing import Callable
-
+from repro.registry import Registry, canonical_name
 from repro.workloads.base import WorkloadScenario
 
-_REGISTRY: dict[str, Callable[..., WorkloadScenario]] = {}
 
-
-def canonical_scenario_name(name: str) -> str:
-    """Normalize a user-supplied scenario key ("Conv_Poisson" style)."""
-    return str(name).strip().lower().replace("_", "-")
-
-
-def register_scenario(name: str):
-    """Decorator: register a factory returning a `WorkloadScenario`."""
-    key = canonical_scenario_name(name)
-
-    def deco(factory: Callable[..., WorkloadScenario]):
-        if not callable(factory):
-            raise TypeError(f"@register_scenario({name!r}) expects a "
-                            f"callable factory, got {factory!r}")
-        prev = _REGISTRY.get(key)
-        if prev is not None and prev is not factory:
-            raise ValueError(f"scenario name {key!r} already registered "
-                             f"to {getattr(prev, '__name__', prev)!r}")
-        _REGISTRY[key] = factory
-        return factory
-
-    return deco
-
-
-def get_scenario(name: str, **opts) -> WorkloadScenario:
-    """Build the scenario registered under `name` with `opts`."""
-    key = canonical_scenario_name(name)
-    try:
-        factory = _REGISTRY[key]
-    except KeyError:
-        raise KeyError(
-            f"unknown workload scenario {name!r}; available: "
-            f"{', '.join(available_scenarios())}") from None
-    scenario = factory(**opts)
+def _check_scenario(key: str, scenario):
     if not isinstance(scenario, WorkloadScenario):
         raise TypeError(f"scenario factory for {key!r} returned "
                         f"{scenario!r}, which lacks generate()/name")
     return scenario
 
 
+_SCENARIOS = Registry(
+    noun="scenario", kind="workload scenario",
+    decorator="register_scenario", expects="callable factory",
+    check=callable, set_name=False, quote_prev=True,
+    post_get=_check_scenario,
+)
+#: historical module-level alias (tests clean up through it)
+_REGISTRY = _SCENARIOS.store
+
+
+def canonical_scenario_name(name: str) -> str:
+    """Normalize a user-supplied scenario key ("Conv_Poisson" style)."""
+    return canonical_name(name)
+
+
+def register_scenario(name: str):
+    """Decorator: register a factory returning a `WorkloadScenario`."""
+    return _SCENARIOS.register(name)
+
+
+def get_scenario(name: str, **opts) -> WorkloadScenario:
+    """Build the scenario registered under `name` with `opts`."""
+    return _SCENARIOS.get(name, **opts)
+
+
 def available_scenarios() -> tuple[str, ...]:
     """Sorted canonical names of every registered scenario."""
-    return tuple(sorted(_REGISTRY))
+    return _SCENARIOS.available()

@@ -1,0 +1,156 @@
+"""Property tests for the CoreManager's event-loop fast paths.
+
+The PR-4 hot-path rewrite replaced per-event numpy dispatch with
+incremental indices: an idle-score array kept in lockstep with the
+idle-history ring buffers, a lazy free-core heap answering Algorithm
+1's masked argmax, and a busy-core set backing the oversubscribed-task
+speed bound. Every test here drives a manager through arbitrary
+assign/release/periodic(idle/wake) sequences and asserts the
+incremental answers are IDENTICAL — bitwise, not approximately — to a
+from-scratch recompute via the reference implementations
+(`repro.core.mapping`, `CoreManager._settled_dvth`).
+"""
+import numpy as np
+import pytest
+
+from repro.core import CoreManager, aging, mapping
+from repro.core.temperature import CState
+
+ALL_POLICIES = ("proposed", "linux", "least-aged", "round-robin",
+                "aging-greedy")
+
+
+def make(policy="proposed", n=8, seed=0, **kw):
+    return CoreManager(n, policy=policy, rng=np.random.default_rng(seed),
+                       **kw)
+
+
+def reference_busy_max(m: CoreManager, now: float) -> float:
+    """The pre-rewrite oversubscribed speed bound: fleet-wide settled
+    frequencies, masked to busy cores (all cores when nothing is busy)."""
+    freqs = aging.frequency(m.params, m.f0, m._settled_dvth(now))
+    busy = m.task_of_core >= 0
+    pool = freqs[busy] if busy.any() else freqs
+    return float(np.max(pool))
+
+
+def assert_fast_paths_match_reference(m: CoreManager, now: float) -> None:
+    active = m.c_state == CState.ACTIVE
+    assigned = m.task_of_core >= 0
+    # incremental idle scores == reference row sums, bitwise
+    np.testing.assert_array_equal(m.idle_score,
+                                  mapping.idle_scores(m.idle_history))
+    # free-core heap == reference masked argmax (incl. tie-breaking)
+    ref_core = mapping.select_core(active, assigned, m.idle_history)
+    assert m._peek_best_free() == ref_core
+    assert m.view.best_idle_core() == ref_core
+    # busy-core set == reference mask
+    assert m._busy_cores == set(int(i) for i in np.flatnonzero(assigned))
+    # oversubscribed speed bound == reference vectorized max, bitwise
+    assert m._busy_max_frequency(now) == reference_busy_max(m, now)
+
+
+def drive_random_schedule(m: CoreManager, rng: np.random.Generator,
+                          steps: int = 100) -> None:
+    live: list[int] = []
+    t, tid = 0.0, 0
+    for _ in range(steps):
+        t += float(rng.uniform(0.01, 0.7))
+        act = int(rng.integers(0, 4))
+        if act == 0 or not live:
+            m.assign(tid, t)
+            live.append(tid)
+            tid += 1
+        elif act == 1:
+            victim = live.pop(int(rng.integers(0, len(live))))
+            m.release(victim, t)
+        elif act == 2:
+            m.periodic(t)           # may gate or wake cores (proposed)
+        else:
+            for _ in range(int(rng.integers(1, 6))):   # saturation burst
+                m.assign(tid, t)
+                live.append(tid)
+                tid += 1
+        assert_fast_paths_match_reference(m, t)
+    # drain, checking along the way
+    for victim in live:
+        t += 0.05
+        m.release(victim, t)
+        assert_fast_paths_match_reference(m, t)
+
+
+class TestIncrementalMatchesRecompute:
+    @pytest.mark.parametrize("policy", ALL_POLICIES)
+    def test_random_schedules(self, policy):
+        for seed in range(4):
+            m = make(policy, n=8, seed=seed)
+            drive_random_schedule(m, np.random.default_rng(seed * 17 + 1))
+
+    def test_heavily_oversubscribed_small_manager(self):
+        """Saturate a 2-core manager so every path (oversub assign,
+        promotion, periodic accrual) exercises the incremental
+        indices."""
+        m = make("proposed", n=2, seed=3)
+        t = 0.0
+        for tid in range(30):
+            t += 0.05
+            m.assign(tid, t)
+            assert_fast_paths_match_reference(m, t)
+        for tid in range(30):
+            t += 0.05
+            m.release(tid, t)
+            assert_fast_paths_match_reference(m, t)
+        assert not m.oversub_tasks
+
+    def test_gate_wake_cycles_keep_heap_consistent(self):
+        """Proposed's Algorithm-2 corrections shrink and grow the
+        working set; the heap must track both transitions."""
+        m = make("proposed", n=16, seed=1)
+        m.assign(0, 0.0)
+        t = 0.0
+        for k in range(12):                  # shrink
+            t += 1.0
+            m.periodic(t)
+            assert_fast_paths_match_reference(m, t)
+        assert (m.c_state == CState.DEEP_IDLE).any()
+        for tid in range(1, 14):             # burst forces wakes
+            m.assign(tid, t)
+        for k in range(8):
+            t += 1.0
+            m.periodic(t)
+            assert_fast_paths_match_reference(m, t)
+
+    def test_external_cstate_mutation_tolerated(self):
+        """Forcing c_state behind the manager's back (test-only pattern)
+        must not let the heap hand out a gated core."""
+        m = make("proposed", n=4, seed=0)
+        m.c_state[:] = CState.DEEP_IDLE
+        assert m._peek_best_free() == -1
+        assert m._peek_best_free() == mapping.select_core(
+            m.c_state == CState.ACTIVE, m.task_of_core >= 0,
+            m.idle_history)
+
+    def test_busy_max_is_pure(self):
+        m = make("proposed", n=4, seed=2)
+        m.assign(0, 0.0)
+        dvth = m.dvth.copy()
+        last = m.last_update.copy()
+        m._busy_max_frequency(123.0)
+        np.testing.assert_array_equal(m.dvth, dvth)
+        np.testing.assert_array_equal(m.last_update, last)
+
+
+class TestHypothesisSchedules:
+    def test_arbitrary_schedules_property(self):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        @given(seed=st.integers(0, 10_000),
+               policy=st.sampled_from(ALL_POLICIES),
+               n=st.sampled_from((2, 5, 8)))
+        @settings(max_examples=30, deadline=None)
+        def run(seed, policy, n):
+            m = make(policy, n=n, seed=seed)
+            drive_random_schedule(m, np.random.default_rng(seed), steps=60)
+
+        run()

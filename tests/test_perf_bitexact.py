@@ -1,0 +1,182 @@
+"""Golden-pinned bit-exactness suite for the PR-4 simulator fast path.
+
+GOLD holds full `ExperimentMetrics` captured from the PRE-optimization
+implementation (promoted-task modeling fix applied, hot paths still the
+original per-event numpy dispatch). The optimized simulator — heap-based
+core selection, incremental idle scores, busy-subset oversubscription
+bound, fleet-batched settlement, deque queues, O(1) decode-completion
+detection — must reproduce every number. Values were verified bitwise
+(repr-identical) against the pre-optimization code on the capture
+machine; the pinned tolerance of 1e-12 (vs the repo's usual 1e-9) only
+absorbs cross-platform libm ulps.
+
+Also pins `run_policy_sweep(parallel=N)` == the serial sweep on a
+3x2x2 grid: per-cell seeding lives entirely in each cell's frozen
+config, so worker processes reproduce the serial results exactly.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.sim import ExperimentConfig, run_experiment, run_policy_sweep
+
+TOL = 1e-12
+
+CELLS = {
+    "proposed": ExperimentConfig(num_cores=40, rate_rps=50, duration_s=15,
+                                 seed=7),
+    "linux": ExperimentConfig(policy="linux", num_cores=40, rate_rps=50,
+                              duration_s=15, seed=7),
+    "least-aged": ExperimentConfig(policy="least-aged", num_cores=40,
+                                   rate_rps=50, duration_s=15, seed=7),
+    # second cell exercises a non-default scenario + aging-aware router
+    "proposed-mmpp-aged": ExperimentConfig(
+        policy="proposed", scenario="conversation-mmpp",
+        router="least-aged-cpu", rate_rps=40, duration_s=10, seed=3),
+}
+
+GOLD = {
+    "proposed": {
+        "freq_cv_percentiles": {
+            1: 0.028915308966174516, 25: 0.03392200273075075,
+            50: 0.03956814163709267, 75: 0.04474988224676765,
+            90: 0.052577631345300545, 99: 0.05651684584460714},
+        "mean_degradation_percentiles": {
+            1: 0.01078339183319639, 25: 0.010927154879033412,
+            50: 0.011173444895245375, 75: 0.011263866496560946,
+            90: 0.011327687356627696, 99: 0.01137506880964343},
+        "idle_norm_percentiles": {
+            1: -0.075, 25: 0.0, 50: 0.025, 75: 0.025, 90: 0.075, 99: 1.0},
+        "oversub_frac_below": 0.0030303030303030303,
+        "task_count_mean": 0.45181818181818184,
+        "task_count_max": 12,
+        "mean_latency_s": 6.84847392093811,
+        "p99_latency_s": 12.96702192419078,
+        "completed": 186,
+        "fleet_degradation_cv": 0.015017404804864014,
+        "fleet_yearly_kgco2eq": 1256.5360812461565,
+    },
+    "linux": {
+        "freq_cv_percentiles": {
+            1: 0.02896339775131182, 25: 0.03374273790198157,
+            50: 0.0399780035035772, 75: 0.04472689532154083,
+            90: 0.05243541176807128, 99: 0.05643424861071352},
+        "mean_degradation_percentiles": {
+            1: 0.01653061560876518, 25: 0.016838715684914005,
+            50: 0.01699604059754733, 75: 0.017350928891948624,
+            90: 0.017427161587444836, 99: 0.017512041999825097},
+        "idle_norm_percentiles": {
+            1: 0.925, 25: 0.975, 50: 1.0, 75: 1.0, 90: 1.0, 99: 1.0},
+        "oversub_frac_below": 0.0,
+        "task_count_mean": 0.41393939393939394,
+        "task_count_max": 6,
+        "mean_latency_s": 6.845652774348468,
+        "p99_latency_s": 13.281451920953165,
+        "completed": 192,
+        "fleet_degradation_cv": 0.015193261583642674,
+        "fleet_yearly_kgco2eq": 1927.6294411313045,
+    },
+    "least-aged": {
+        "freq_cv_percentiles": {
+            1: 0.0289632953332969, 25: 0.03374211247600363,
+            50: 0.03997596950427362, 75: 0.044725516511392165,
+            90: 0.052435684680154374, 99: 0.05643286007969888},
+        "mean_degradation_percentiles": {
+            1: 0.016530537087270432, 25: 0.016838506294655713,
+            50: 0.016996332326598446, 75: 0.017350977766074534,
+            90: 0.017427158691634005, 99: 0.017512094707309137},
+        "idle_norm_percentiles": {
+            1: 0.925, 25: 0.975, 50: 1.0, 75: 1.0, 90: 1.0, 99: 1.0},
+        "oversub_frac_below": 0.0,
+        "task_count_mean": 0.4103030303030303,
+        "task_count_max": 6,
+        "mean_latency_s": 6.695974653777007,
+        "p99_latency_s": 12.265554519093937,
+        "completed": 192,
+        "fleet_degradation_cv": 0.015198877568723157,
+        "fleet_yearly_kgco2eq": 1927.63250963261,
+    },
+    "proposed-mmpp-aged": {
+        "freq_cv_percentiles": {
+            1: 0.02606572685057002, 25: 0.03592799911413752,
+            50: 0.041160087839373416, 75: 0.0473705820504461,
+            90: 0.04791314844749198, 99: 0.054067821039909675},
+        "mean_degradation_percentiles": {
+            1: 0.010694229394002984, 25: 0.010890442191191667,
+            50: 0.010994269445354707, 75: 0.011193918718551122,
+            90: 0.011348885709066645, 99: 0.011416982341791698},
+        "idle_norm_percentiles": {
+            1: -0.05, 25: 0.0, 50: 0.025, 75: 0.025,
+            90: 0.3424999999999962, 99: 1.0},
+        "oversub_frac_below": 0.004545454545454545,
+        "task_count_mean": 0.41818181818181815,
+        "task_count_max": 14,
+        "mean_latency_s": 3.94816806315291,
+        "p99_latency_s": 8.804968378426421,
+        "completed": 62,
+        "fleet_degradation_cv": 0.017758259754216115,
+        "fleet_yearly_kgco2eq": 1332.9488686904274,
+    },
+}
+
+
+class TestOptimizedMatchesPreOptimizationGoldens:
+    @pytest.mark.parametrize("cell", sorted(CELLS))
+    def test_full_metrics_pinned(self, cell):
+        m = run_experiment(CELLS[cell])
+        gold = GOLD[cell]
+        for field in ("freq_cv_percentiles", "mean_degradation_percentiles",
+                      "idle_norm_percentiles"):
+            got = getattr(m, field)
+            for p, v in gold[field].items():
+                assert got[p] == pytest.approx(v, abs=TOL), (field, p)
+        for field in ("oversub_frac_below", "task_count_mean",
+                      "mean_latency_s", "p99_latency_s",
+                      "fleet_degradation_cv", "fleet_yearly_kgco2eq"):
+            assert getattr(m, field) == pytest.approx(gold[field],
+                                                      abs=TOL), field
+        assert m.task_count_max == gold["task_count_max"]
+        assert m.completed == gold["completed"]
+
+
+def _assert_metrics_identical(a, b, key):
+    """Field-by-field exact equality of two ExperimentMetrics (same
+    process/platform -> no tolerance at all)."""
+    assert a.policy == b.policy and a.scenario == b.scenario
+    assert a.router == b.router
+    assert a.completed == b.completed, key
+    assert a.task_count_max == b.task_count_max
+    for field in ("freq_cv_percentiles", "mean_degradation_percentiles",
+                  "idle_norm_percentiles"):
+        assert getattr(a, field) == getattr(b, field), (key, field)
+    for field in ("oversub_frac_below", "task_count_mean",
+                  "mean_latency_s", "p99_latency_s",
+                  "fleet_degradation_cv", "fleet_yearly_kgco2eq"):
+        va, vb = getattr(a, field), getattr(b, field)
+        assert va == vb or (math.isnan(va) and math.isnan(vb)), (key, field)
+    np.testing.assert_array_equal(a.per_machine_cv, b.per_machine_cv)
+    np.testing.assert_array_equal(a.per_machine_degradation,
+                                  b.per_machine_degradation)
+    assert a.per_machine_carbon == b.per_machine_carbon
+
+
+class TestParallelSweepIdentical:
+    def test_3x2x2_grid_matches_serial(self):
+        cfg = ExperimentConfig(rate_rps=40.0, duration_s=10.0, seed=0)
+        policies = ("linux", "least-aged", "proposed")
+        scenarios = ("conversation-poisson", "conversation-mmpp")
+        routers = ("jsq", "least-aged-cpu")
+        serial = run_policy_sweep(cfg, policies=policies,
+                                  scenarios=scenarios, routers=routers)
+        par = run_policy_sweep(cfg, policies=policies, scenarios=scenarios,
+                               routers=routers, parallel=2)
+        assert list(par) == list(serial)     # same keys, same order
+        for key in serial:
+            _assert_metrics_identical(serial[key], par[key], key)
+
+    def test_parallel_one_and_none_fall_back_to_serial_path(self):
+        cfg = ExperimentConfig(rate_rps=40.0, duration_s=5.0, seed=1)
+        a = run_policy_sweep(cfg, policies=("linux",))
+        b = run_policy_sweep(cfg, policies=("linux",), parallel=1)
+        _assert_metrics_identical(a["linux"], b["linux"], "linux")

@@ -24,19 +24,23 @@ ALL_POLICIES = ("proposed", "linux", "least-aged", "round-robin",
 # Captured from the seed (pre-refactor) implementation:
 #   run_experiment(Policy.<P>, num_cores=40, rate_rps=50, duration_s=15,
 #                  seed=7)
-# `proposed` re-captured after the PR-3 oversubscription bugfix (the
-# speed of an oversubscribed task is now bounded by the settled
-# frequency of the fastest *busy* core, not a stale max over all cores
-# including pristine idle ones); linux/least-aged never oversubscribe
-# and still match the pre-refactor capture bit-exactly.
+# `proposed` re-captured twice since: after the PR-3 oversubscription
+# bugfix (speed bounded by the fastest *busy* core), and after the PR-4
+# promoted-task fix (a task promoted from the oversubscription queue now
+# has its remaining duration recomputed from the promoted core's settled
+# frequency instead of keeping the submission-time time-shared rate, so
+# promoted tasks finish earlier and free cores sooner); linux/least-aged
+# never oversubscribe and still match the pre-refactor capture
+# bit-exactly — they pin that neither fix nor the PR-4 fast-path rewrite
+# perturbs the non-oversubscribed trajectory.
 GOLD = {
     "proposed": {
-        "freq_cv_p50": 0.0396535760088097,
-        "deg_p50": 0.011188619627776467,
-        "deg_p99": 0.011773737700802438,
-        "idle_p90": 0.052500000000000574,
-        "mean_latency_s": 6.913202157881033,
-        "completed": 187,
+        "freq_cv_p50": 0.03956814163709267,
+        "deg_p50": 0.011173444895245375,
+        "deg_p99": 0.01137506880964343,
+        "idle_p90": 0.075,
+        "mean_latency_s": 6.84847392093811,
+        "completed": 186,
     },
     "linux": {
         "freq_cv_p50": 0.0399780035035772,

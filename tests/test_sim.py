@@ -127,6 +127,42 @@ class TestClusterEndToEnd:
         with pytest.raises(TypeError, match="ExperimentConfig"):
             run_experiment("proposed")
 
+    def test_promoted_task_duration_recomputed(self):
+        """ROADMAP modeling fix: a task promoted from the oversubscription
+        queue must have its remaining duration recomputed from the
+        promoted core's settled frequency — not keep the submission-time
+        time-shared rate for its whole life."""
+        from repro.sim.cluster import Machine, OVERSUB_SLOWDOWN
+        from repro.sim.events import EventQueue
+        from repro.sim.tasks import TASK_DURATIONS_S
+        from repro.core import aging
+
+        cfg = ExperimentConfig(num_cores=1, policy="linux", seed=4)
+        q = EventQueue()
+        m = Machine(0, cfg, q)
+        mgr = m.manager
+        work = TASK_DURATIONS_S["submit"]
+        done_at = {}
+        m.run_cpu_task("submit", lambda: done_at.setdefault("A", q.now))
+        m.run_cpu_task("submit", lambda: done_at.setdefault("B", q.now))
+        assert len(mgr.oversub_tasks) == 1
+        s0 = float(mgr.frequencies(0.0)[0])      # fresh core speed
+        t_a = work / s0                          # A's completion = B's promotion
+        q.run_until(10.0)
+        # B progressed at the time-shared rate until t_a, then finished at
+        # the promoted core's settled (slightly degraded) frequency.
+        waited_work = t_a * (s0 / OVERSUB_SLOWDOWN)
+        dvth_at_ta = aging.dvth_after(
+            mgr.params, 54.0, 1.0, t_a, 0.0)      # core 0 busy 0..t_a
+        s_promoted = aging.frequency_scalar(
+            mgr.params, float(mgr.f0[0]), dvth_at_ta)
+        expected_b = t_a + (work - waited_work) / s_promoted
+        assert done_at["A"] == pytest.approx(t_a, rel=1e-12)
+        assert done_at["B"] == pytest.approx(expected_b, rel=1e-9)
+        # strictly earlier than the old submission-time-rate semantics
+        assert done_at["B"] < work / s0 * OVERSUB_SLOWDOWN
+        assert m.running_cpu_tasks == 0 and not m._oversub_inflight
+
     def test_legacy_trace_shim_matches_scenario(self):
         """The deprecated TraceConfig path must resolve to the
         conversation-poisson scenario bit-exactly."""
