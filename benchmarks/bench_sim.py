@@ -66,9 +66,7 @@ def _run_once(cfg: ExperimentConfig) -> dict:
     cluster.run(list(trace), cfg.duration_s,
                 sample_period_s=cfg.sample_period_s)
     wall = time.perf_counter() - t0
-    m = metrics_mod.collect(cluster, cfg.policy, cfg.num_cores,
-                            cfg.rate_rps, scenario=cfg.scenario,
-                            router=cfg.router)
+    m = metrics_mod.collect(cluster, cfg)
     return {"wall_s": wall, "events": cluster.queue.processed,
             "completed": m.completed}
 

@@ -10,6 +10,7 @@ import time
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments")
 DEFAULT_SCENARIOS = ("conversation-poisson",)
 DEFAULT_ROUTERS = ("jsq",)
+DEFAULT_CARBON_MODELS = ("linear-extension",)
 
 
 def add_scenario_arg(parser: argparse.ArgumentParser) -> None:
@@ -38,6 +39,19 @@ def resolve_routers(args: argparse.Namespace) -> tuple[str, ...]:
         else DEFAULT_ROUTERS
 
 
+def add_carbon_model_arg(parser: argparse.ArgumentParser) -> None:
+    parser.add_argument(
+        "--carbon-model", action="append", default=None, metavar="NAME",
+        help="carbon-accounting model for the embodied-carbon figures "
+        f"(fig7); repeatable; default {DEFAULT_CARBON_MODELS[0]}. See "
+        "repro.carbon.available_carbon_models()")
+
+
+def resolve_carbon_models(args: argparse.Namespace) -> tuple[str, ...]:
+    return tuple(args.carbon_model) if getattr(args, "carbon_model", None) \
+        else DEFAULT_CARBON_MODELS
+
+
 def parse_scenarios(description: str | None = None) -> tuple[str, ...]:
     """One-stop argparse for the fig drivers' `__main__` blocks."""
     ap = argparse.ArgumentParser(description=description)
@@ -45,14 +59,18 @@ def parse_scenarios(description: str | None = None) -> tuple[str, ...]:
     return resolve_scenarios(ap.parse_args())
 
 
-def parse_axes(description: str | None = None) -> tuple[tuple[str, ...],
-                                                        tuple[str, ...]]:
-    """argparse for drivers that sweep both scenarios and routers."""
+def parse_axes(description: str | None = None,
+               carbon: bool = False) -> tuple:
+    """argparse for drivers that sweep scenarios and routers; with
+    `carbon=True` the carbon-model axis joins the returned tuple."""
     ap = argparse.ArgumentParser(description=description)
     add_scenario_arg(ap)
     add_router_arg(ap)
+    if carbon:
+        add_carbon_model_arg(ap)
     args = ap.parse_args()
-    return resolve_scenarios(args), resolve_routers(args)
+    axes = (resolve_scenarios(args), resolve_routers(args))
+    return axes + ((resolve_carbon_models(args),) if carbon else ())
 
 
 def emit(name: str, rows: list[dict]) -> None:

@@ -7,53 +7,73 @@ registered workload scenario — the headline number's robustness to
 temporal demand shape (EcoServe's central question) in one sweep.
 `--router` (repeatable) does the same on the cluster-routing axis and
 additionally reports the per-run fleet yearly total aggregated from
-per-machine `CarbonEstimate`s.
+per-machine `LifetimeEstimate`s. `--carbon-model` (repeatable) re-prices
+the same degradation data under any registered `repro.carbon` model —
+the EcoLogits-style range over lifetime assumptions (e.g. the paper's
+conservative `linear-extension` next to the optimistic
+`reliability-threshold`). Each sweep's full grid is also persisted as a
+`SweepResult` JSON next to the row CSVs, so runs diff across commits.
 """
 from __future__ import annotations
 
-from repro.core.carbon import CPU_EMBODIED_KGCO2EQ, BASELINE_LIFESPAN_YEARS
+import os
+
 from repro.sim import ExperimentConfig, carbon_comparison, run_policy_sweep
 
-from benchmarks.common import (DEFAULT_ROUTERS, DEFAULT_SCENARIOS, emit,
+from benchmarks.common import (DEFAULT_CARBON_MODELS, DEFAULT_ROUTERS,
+                               DEFAULT_SCENARIOS, RESULTS_DIR, emit,
                                parse_axes)
 
 N_MACHINES = 22
 
 
 def run(duration_s: float = 120.0, rates=(40, 70, 100),
-        scenarios=DEFAULT_SCENARIOS, routers=DEFAULT_ROUTERS) -> list[dict]:
+        scenarios=DEFAULT_SCENARIOS, routers=DEFAULT_ROUTERS,
+        carbon_models=DEFAULT_CARBON_MODELS) -> list[dict]:
     rows = []
+    os.makedirs(RESULTS_DIR, exist_ok=True)
     for scenario in scenarios:
         for router in routers:
             for rate in rates:
+                # One simulation per cell: aging is carbon-model-
+                # independent, so each requested model re-prices the
+                # same saved degradation data (`fleet_yearly_under`,
+                # exact) instead of re-running the sweep.
                 res = run_policy_sweep(ExperimentConfig(
                     num_cores=40, rate_rps=rate, duration_s=duration_s,
                     seed=1, scenario=scenario, router=router))
-                base_yearly = (N_MACHINES * CPU_EMBODIED_KGCO2EQ
-                               / BASELINE_LIFESPAN_YEARS)
-                for tech in ("least-aged", "proposed"):
-                    for pct in (99, 50):
-                        est = carbon_comparison(res["linux"], res[tech], pct)
-                        rows.append({
-                            "scenario": res[tech].scenario,
-                            "router": res[tech].router,
-                            "rate_rps": rate,
-                            "policy": tech,
-                            "percentile": pct,
-                            "lifetime_extension": round(
-                                est.extension_factor, 4),
-                            "cluster_yearly_kgco2eq": round(
-                                N_MACHINES * est.yearly_kgco2eq, 2),
-                            "cluster_baseline_kgco2eq": round(base_yearly, 2),
-                            "reduction_pct": round(
-                                100 * est.reduction_frac, 2),
-                            "fleet_yearly_kgco2eq": round(
-                                res[tech].fleet_yearly_kgco2eq, 2),
-                        })
+                res.save(os.path.join(
+                    RESULTS_DIR,
+                    f"fig7_sweep_{scenario}_{router}_r{rate}.json"))
+                for model in carbon_models:
+                    for tech in ("least-aged", "proposed"):
+                        fleet_yearly = res[tech].fleet_yearly_under(model)
+                        for pct in (99, 50):
+                            est = carbon_comparison(res["linux"], res[tech],
+                                                    pct, model=model)
+                            rows.append({
+                                "scenario": res[tech].scenario,
+                                "router": res[tech].router,
+                                "carbon_model": model,
+                                "rate_rps": rate,
+                                "policy": tech,
+                                "percentile": pct,
+                                "lifetime_extension": round(
+                                    est.extension_factor, 4),
+                                "cluster_yearly_kgco2eq": round(
+                                    N_MACHINES * est.yearly_kgco2eq, 2),
+                                "cluster_baseline_kgco2eq": round(
+                                    N_MACHINES * est.baseline_yearly_kgco2eq,
+                                    2),
+                                "reduction_pct": round(
+                                    100 * est.reduction_frac, 2),
+                                "fleet_yearly_kgco2eq": round(
+                                    fleet_yearly, 2),
+                            })
     emit("fig7_carbon", rows)
     return rows
 
 
 if __name__ == "__main__":
-    scenarios, routers = parse_axes(__doc__)
-    run(scenarios=scenarios, routers=routers)
+    scenarios, routers, carbon_models = parse_axes(__doc__, carbon=True)
+    run(scenarios=scenarios, routers=routers, carbon_models=carbon_models)

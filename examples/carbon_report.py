@@ -3,9 +3,16 @@
 <10% oversubscription.
 
   PYTHONPATH=src python examples/carbon_report.py [--duration 300]
+      [--carbon-model reliability-threshold] [--save sweep.json]
+
+`--carbon-model` re-prices the aging data under any registered
+`repro.carbon` model; `--save` persists the whole sweep as a
+`SweepResult` JSON that `repro.sim.SweepResult.load` restores
+losslessly (provenance included) for cross-run diffs.
 """
 import argparse
 
+from repro.carbon import get_carbon_model
 from repro.sim import ExperimentConfig, carbon_comparison, run_policy_sweep
 
 
@@ -17,11 +24,20 @@ def main() -> None:
     ap.add_argument("--router", default="jsq",
                     help="cluster request router (see "
                     "repro.sim.available_routers())")
+    ap.add_argument("--carbon-model", default="linear-extension",
+                    help="carbon-accounting model (see "
+                    "repro.carbon.available_carbon_models())")
+    ap.add_argument("--intensity", type=float, default=436.0,
+                    help="grid carbon intensity [gCO2eq/kWh] for the "
+                    "operational+embodied footprint line")
+    ap.add_argument("--save", default=None, metavar="PATH",
+                    help="write the sweep as a SweepResult JSON")
     args = ap.parse_args()
 
     res = run_policy_sweep(ExperimentConfig(
         num_cores=args.cores, rate_rps=args.rate,
-        duration_s=args.duration, seed=1, router=args.router))
+        duration_s=args.duration, seed=1, router=args.router,
+        carbon_model=args.carbon_model))
     linux, proposed = res["linux"], res["proposed"]
 
     print(f"cluster: 22 machines (5 prompt + 17 token), {args.cores}-core "
@@ -44,7 +60,27 @@ def main() -> None:
           f"{'<10%':>10s} {lat:>+9.2f}%")
     print(f"\nrouter: {args.router} — fleet degradation CV "
           f"{proposed.fleet_degradation_cv:.4f}, fleet yearly embodied "
-          f"{proposed.fleet_yearly_kgco2eq:.1f} kgCO2eq")
+          f"{proposed.fleet_yearly_kgco2eq:.1f} kgCO2eq "
+          f"[{args.carbon_model}]")
+
+    deg_l = linux.mean_degradation_percentiles[99]
+    deg_p = proposed.mean_degradation_percentiles[99]
+    fp = get_carbon_model(
+        "operational-embodied",
+        intensity="constant",
+        intensity_opts={"value_g_per_kwh": args.intensity},
+        lifetime_model=args.carbon_model,
+    ).footprint(deg_l, deg_p)
+    print(f"per-server total @ {args.intensity:.0f} gCO2/kWh: "
+          f"{fp.total_kg:.0f} kgCO2eq/yr (operational "
+          f"{fp.operational_kg:.0f}, CPU embodied {fp.cpu_embodied_kg:.1f}, "
+          f"accel embodied {fp.gpu_embodied_kg:.1f}; embodied share "
+          f"{100*fp.embodied_frac:.1f}%)")
+
+    if args.save:
+        res.save(args.save)
+        print(f"\nsweep saved to {args.save} "
+              f"(SweepResult.load round-trips it, provenance included)")
 
 
 if __name__ == "__main__":

@@ -9,7 +9,8 @@ outcome plus the embodied-carbon estimate.
 """
 import numpy as np
 
-from repro.core import CoreManager, carbon
+from repro.carbon import get_carbon_model
+from repro.core import CoreManager
 from repro.workloads import get_scenario
 
 HOURS = 6
@@ -54,7 +55,8 @@ def main() -> None:
         print(f"{policy:10s} mean_freq_degradation={deg:.5f} "
               f"freq_cv={mgr.frequency_cv():.4f} active_cores={active}/40")
 
-    est = carbon.estimate(results["linux"], results["proposed"])
+    est = get_carbon_model("linear-extension").lifetime(
+        results["linux"], results["proposed"])
     print(f"\nCPU lifetime extension: {est.extension_factor:.2f}x "
           f"({est.extended_life_years:.1f} years)")
     print(f"Yearly CPU embodied carbon: "

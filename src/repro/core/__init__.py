@@ -9,7 +9,8 @@ Public API:
   policies    — pluggable CorePolicy registry (proposed, linux,
                 least-aged, round-robin, aging-greedy, + user-defined)
   manager     — policy-agnostic CoreManager runtime
-  carbon      — embodied-carbon amortization estimates
+  carbon      — compatibility re-export of `repro.carbon` (the pluggable
+                carbon-accounting subsystem: models + intensity signals)
 """
 from repro.core import (aging, carbon, idling, mapping, policies,
                         temperature, variation)

@@ -1,112 +1,34 @@
-"""Embodied-carbon amortization model (paper §2.1, §6.2 Fig. 7).
+"""Compatibility re-export: carbon accounting moved to `repro.carbon`.
 
-Amortization accounts embodied carbon over the asset's operating life:
-a CPU with E kgCO2eq embodied over L years emits E/L kgCO2eq per year.
-The paper extends CPU life by slowing aging: lifetime extension is
-estimated with a *linear model* — the ratio of `linux` mean frequency
-degradation to the technique's mean frequency degradation:
+The single hard-coded linear lifetime-extension formula that lived here
+is now the `linear-extension` model in the pluggable `repro.carbon`
+subsystem (bit-exact, golden-pinned in tests/test_carbon.py), alongside
+a reliability-threshold lifetime model and an EcoServe-style
+operational+embodied footprint model driven by grid `CarbonIntensity`
+signals. New code should do:
 
-    extension = deg_linux / deg_technique
-    life'     = 3 years * extension
-    yearly'   = E / life'
-    saving    = 1 - yearly'/yearly = 1 - 1/extension
+    from repro.carbon import get_carbon_model
+    est = get_carbon_model("linear-extension").lifetime(deg_ref, deg_tech)
 
-Constants come from Li'24 ("Towards Carbon-efficient LLM Life Cycle"):
-a typical Linux LLM inference server refreshes hardware every 3 years,
-with 278.3 kgCO2eq CPU embodied carbon over that lifespan.
+`carbon.estimate` / `CarbonEstimate` / `yearly_footprint` keep working
+through this module unchanged.
 """
 from __future__ import annotations
 
-import dataclasses
+from repro.carbon.base import (BASELINE_LIFESPAN_YEARS,
+                               CPU_EMBODIED_KGCO2EQ, MAX_EXTENSION_FACTOR,
+                               MIN_EXTENSION_FACTOR)
+from repro.carbon.models import (CarbonEstimate, GPU_EMBODIED_KGCO2EQ,
+                                 HOURS_PER_YEAR, SERVER_GPU_TDP_W,
+                                 SERVER_OTHER_TDP_W,
+                                 cluster_yearly_emissions, estimate,
+                                 lifetime_extension, reference_degradation,
+                                 yearly_footprint)
 
-from repro.core import aging, temperature
-
-CPU_EMBODIED_KGCO2EQ = 278.3   # per server CPU over baseline lifespan [18]
-BASELINE_LIFESPAN_YEARS = 3.0  # hardware refresh cycle [18]
-
-
-@dataclasses.dataclass(frozen=True)
-class CarbonEstimate:
-    extension_factor: float
-    extended_life_years: float
-    yearly_kgco2eq: float
-    baseline_yearly_kgco2eq: float
-    reduction_frac: float
-
-
-def lifetime_extension(deg_linux: float, deg_technique: float) -> float:
-    """Linear lifetime-extension model. Degradations must be >= 0."""
-    if deg_technique <= 0.0:
-        # Technique halted aging entirely within the horizon; cap the
-        # extension at a large, finite factor to stay physical.
-        return 100.0
-    return max(deg_linux / deg_technique, 1e-6)
-
-
-def estimate(deg_linux: float, deg_technique: float,
-             embodied_kg: float = CPU_EMBODIED_KGCO2EQ,
-             base_life_years: float = BASELINE_LIFESPAN_YEARS) -> CarbonEstimate:
-    ext = lifetime_extension(deg_linux, deg_technique)
-    life = base_life_years * ext
-    yearly = embodied_kg / life
-    base_yearly = embodied_kg / base_life_years
-    return CarbonEstimate(
-        extension_factor=ext,
-        extended_life_years=life,
-        yearly_kgco2eq=yearly,
-        baseline_yearly_kgco2eq=base_yearly,
-        reduction_frac=1.0 - yearly / base_yearly,
-    )
-
-
-def cluster_yearly_emissions(per_server_estimates: list[CarbonEstimate]) -> float:
-    return sum(e.yearly_kgco2eq for e in per_server_estimates)
-
-
-def reference_degradation(params: aging.AgingParams,
-                          elapsed_s: float) -> float:
-    """Worst-case mean frequency degradation of a fresh core aged
-    continuously at active-allocated stress for `elapsed_s` — the
-    linear-aging reference the carbon-greedy router and the fleet
-    carbon metrics normalize against (stands in for the `linux`
-    baseline of `lifetime_extension` within a single run)."""
-    dvth = aging.dvth_after(params, temperature.TEMP_ACTIVE_ALLOCATED_C,
-                            temperature.STRESS_ACTIVE,
-                            max(elapsed_s, 1e-9))
-    return params.f_nominal * dvth / params.headroom
-
-
-# ------------------------------------------------------------------ #
-# Fig.-1-style motivation model: operational vs embodied carbon of an
-# inference server as grid carbon intensity falls (paper Fig. 1).
-# ------------------------------------------------------------------ #
-SERVER_GPU_TDP_W = 4 * 700.0        # 4x accelerator server (H100-class)
-SERVER_OTHER_TDP_W = 800.0          # host CPU/mem/fans
-# Accelerator embodied is comparatively small: Li'24 (paper [18]) finds
-# the CPU die + mainboard dominate inference-server embodied carbon.
-GPU_EMBODIED_KGCO2EQ = 150.0
-HOURS_PER_YEAR = 8766.0
-
-
-def yearly_footprint(carbon_intensity_g_per_kwh: float,
-                     utilization: float = 0.6,
-                     cpu_life_years: float = BASELINE_LIFESPAN_YEARS,
-                     gpu_life_years: float = BASELINE_LIFESPAN_YEARS) -> dict:
-    """Yearly kgCO2eq of one inference server split into operational and
-    embodied (CPU vs accelerator) components, for a grid at the given
-    carbon intensity. Reproduces the paper's Fig.-1 observation: as
-    intensity drops, CPU embodied dominates."""
-    energy_kwh = (SERVER_GPU_TDP_W + SERVER_OTHER_TDP_W) \
-        * utilization * HOURS_PER_YEAR / 1000.0
-    operational = energy_kwh * carbon_intensity_g_per_kwh / 1000.0
-    cpu_embodied = CPU_EMBODIED_KGCO2EQ / cpu_life_years
-    gpu_embodied = GPU_EMBODIED_KGCO2EQ / gpu_life_years
-    total = operational + cpu_embodied + gpu_embodied
-    return {
-        "carbon_intensity": carbon_intensity_g_per_kwh,
-        "operational_kg": operational,
-        "cpu_embodied_kg": cpu_embodied,
-        "gpu_embodied_kg": gpu_embodied,
-        "total_kg": total,
-        "cpu_embodied_frac": cpu_embodied / total,
-    }
+__all__ = [
+    "BASELINE_LIFESPAN_YEARS", "CPU_EMBODIED_KGCO2EQ",
+    "MAX_EXTENSION_FACTOR", "MIN_EXTENSION_FACTOR", "CarbonEstimate",
+    "GPU_EMBODIED_KGCO2EQ", "HOURS_PER_YEAR", "SERVER_GPU_TDP_W",
+    "SERVER_OTHER_TDP_W", "cluster_yearly_emissions", "estimate",
+    "lifetime_extension", "reference_degradation", "yearly_footprint",
+]

@@ -1,29 +1,38 @@
 """Event-driven LLM inference cluster simulator (extended splitwise-sim).
 
-Workloads come from the pluggable `repro.workloads` scenario registry;
-`Request` is re-exported here for convenience, and `TraceConfig` /
-`generate` / `trace_stats` survive as deprecated shims over it.
+Workloads come from the pluggable `repro.workloads` scenario registry
+(`Request` is re-exported here for convenience); carbon accounting from
+the pluggable `repro.carbon` model registry. Results are frozen,
+serializable `ExperimentResult`s; sweeps return a `SweepResult` with
+`save`/`load`/`to_rows`. The deprecated `TraceConfig` / `generate` /
+`trace_stats` shims were removed — use
+`repro.workloads.get_scenario(...)` / `request_stats`.
 """
 from repro.sim.cluster import Cluster, Machine, PromptInstance, TokenInstance
 from repro.sim.config import ExperimentConfig
 from repro.sim.events import EventQueue
 from repro.sim.fleetstate import FleetAgingSettler, settle_fleet
-from repro.sim.metrics import ExperimentMetrics, carbon_comparison, collect
+from repro.sim.metrics import PERCENTILES, carbon_comparison, collect
+from repro.sim.results import (ExperimentResult, Provenance, SweepResult)
 from repro.sim.routing import (ClusterRouter, FleetView, MachineAging,
                                available_routers, canonical_router_name,
                                get_router, register_router)
 from repro.sim.runner import (DEFAULT_SWEEP, run_experiment,
                               run_policy_sweep)
 from repro.sim.tasks import CPUTask, TASK_DURATIONS_S, TaskIdAllocator
-from repro.sim.trace import Request, TraceConfig, generate, trace_stats
+from repro.workloads import Request
+
+#: historical alias — `ExperimentMetrics` became the frozen,
+#: serializable `ExperimentResult` (same field names).
+ExperimentMetrics = ExperimentResult
 
 __all__ = [
     "Cluster", "Machine", "PromptInstance", "TokenInstance", "EventQueue",
-    "ExperimentConfig", "ExperimentMetrics", "FleetAgingSettler",
-    "settle_fleet", "carbon_comparison", "collect",
+    "ExperimentConfig", "ExperimentMetrics", "ExperimentResult",
+    "Provenance", "SweepResult", "FleetAgingSettler", "settle_fleet",
+    "PERCENTILES", "carbon_comparison", "collect",
     "ClusterRouter", "FleetView", "MachineAging", "available_routers",
     "canonical_router_name", "get_router", "register_router",
     "DEFAULT_SWEEP", "run_experiment", "run_policy_sweep", "CPUTask",
-    "TASK_DURATIONS_S", "TaskIdAllocator", "Request", "TraceConfig",
-    "generate", "trace_stats",
+    "TASK_DURATIONS_S", "TaskIdAllocator", "Request",
 ]

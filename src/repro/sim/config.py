@@ -20,8 +20,11 @@ result dicts.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 from typing import Any, Mapping
 
+from repro.carbon.registry import canonical_carbon_model_name
 from repro.core.policies import canonical_policy_name
 from repro.sim.routing import canonical_router_name
 from repro.workloads import canonical_scenario_name
@@ -44,6 +47,10 @@ class ExperimentConfig:
     # options; see `repro.sim.routing`)
     router: str = "jsq"
     router_opts: tuple[tuple[str, Any], ...] = ()
+    # carbon accounting (model registry name + constructor options; see
+    # `repro.carbon` — prices per-machine embodied carbon in the result)
+    carbon_model: str = "linear-extension"
+    carbon_opts: tuple[tuple[str, Any], ...] = ()
     # workload (scenario registry name + factory options; the scenario
     # receives rate_rps / duration_s / seed at generation time)
     scenario: str = "conversation-poisson"
@@ -65,7 +72,10 @@ class ExperimentConfig:
                            canonical_scenario_name(self.scenario))
         object.__setattr__(self, "router",
                            canonical_router_name(self.router))
-        for field in ("policy_opts", "scenario_opts", "router_opts"):
+        object.__setattr__(self, "carbon_model",
+                           canonical_carbon_model_name(self.carbon_model))
+        for field in ("policy_opts", "scenario_opts", "router_opts",
+                      "carbon_opts"):
             opts = getattr(self, field)
             if isinstance(opts, Mapping):
                 opts = opts.items()
@@ -95,6 +105,19 @@ class ExperimentConfig:
         """`router_opts` as a plain kwargs dict."""
         return dict(self.router_opts)
 
+    @property
+    def carbon_options(self) -> dict[str, Any]:
+        """`carbon_opts` as a plain kwargs dict."""
+        return dict(self.carbon_opts)
+
+    def fingerprint(self) -> str:
+        """Stable short hash of every field — the provenance key that
+        says whether two `ExperimentResult`s came from the same
+        experiment. Robust to opt ordering (opts are stored sorted)."""
+        payload = json.dumps(dataclasses.asdict(self), sort_keys=True,
+                             default=repr)
+        return hashlib.sha256(payload.encode()).hexdigest()[:12]
+
     def replace(self, **changes) -> "ExperimentConfig":
         """Frozen-friendly copy-with-overrides."""
         return dataclasses.replace(self, **changes)
@@ -119,3 +142,11 @@ class ExperimentConfig:
         return dataclasses.replace(self, router=router,
                                    router_opts=tuple(sorted(
                                        router_opts.items())))
+
+    def with_carbon_model(self, carbon_model: str,
+                          **carbon_opts) -> "ExperimentConfig":
+        """Same experiment, different carbon accounting (opts reset
+        unless given)."""
+        return dataclasses.replace(self, carbon_model=carbon_model,
+                                   carbon_opts=tuple(sorted(
+                                       carbon_opts.items())))

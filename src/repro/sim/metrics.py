@@ -1,60 +1,26 @@
-"""Cluster-level metric aggregation (paper §6.1.3)."""
-from __future__ import annotations
+"""Cluster-level metric aggregation (paper §6.1.3).
 
-import dataclasses
+`collect` reads a finished `Cluster` and produces the frozen,
+serializable `ExperimentResult` (see `repro.sim.results`); the
+embodied-carbon columns are priced by the experiment's configured
+carbon model (`cfg.carbon_model`, see `repro.carbon`).
+"""
+from __future__ import annotations
 
 import numpy as np
 
-from repro.core import carbon
+from repro.carbon import get_carbon_model, reference_degradation
+from repro.carbon.base import CarbonModel, LifetimeEstimate
 from repro.sim.cluster import Cluster
+from repro.sim.config import ExperimentConfig
+from repro.sim.results import ExperimentResult, Provenance
 
 PERCENTILES = (1, 25, 50, 75, 90, 99)
 
 
-@dataclasses.dataclass
-class ExperimentMetrics:
-    policy: str
-    num_cores: int
-    rate_rps: float
-    scenario: str
-    # paper Fig. 6: CV of per-server core-frequency distribution, and mean
-    # frequency degradation, percentiled across the cluster's machines.
-    freq_cv_percentiles: dict
-    mean_degradation_percentiles: dict
-    # paper Fig. 8: normalized idle cores distribution (negative = oversub)
-    idle_norm_percentiles: dict
-    oversub_frac_below: float      # fraction of samples below -0.1
-    # paper Fig. 2: concurrent CPU tasks per machine
-    task_count_mean: float
-    task_count_max: int
-    # service quality (NaN when nothing completed — a starved config must
-    # never rank as winning a latency comparison)
-    mean_latency_s: float
-    p99_latency_s: float
-    completed: int
-    # cluster-routing axis (see `repro.sim.routing`)
-    router: str = "jsq"
-    # fleet-level aging imbalance: cross-machine CV of per-machine mean
-    # frequency degradation, computed within each serving role (prompt /
-    # token) and machine-count-weighted. A cluster router can only level
-    # aging among peers serving the same phase — the prompt/token role
-    # gap is deployment topology, not routing quality — so mixing roles
-    # into one CV would swamp the quantity routing actually controls.
-    fleet_degradation_cv: float = float("nan")
-    # per-machine embodied-carbon estimates vs the worst-case
-    # linear-aging reference at the same horizon, and their fleet total
-    per_machine_carbon: list = None
-    fleet_yearly_kgco2eq: float = float("nan")
-    # raw per-machine values for downstream carbon estimates
-    per_machine_cv: np.ndarray = None
-    per_machine_degradation: np.ndarray = None
-    per_machine_idle_norm: list = None
-    per_machine_task_samples: list = None
-
-
 def _role_weighted_cv(degs: np.ndarray, n_prompt: int) -> float:
     """Cross-machine degradation CV within each serving role, weighted
-    by machine count (see `ExperimentMetrics.fleet_degradation_cv`)."""
+    by machine count (see `ExperimentResult.fleet_degradation_cv`)."""
     parts = []
     for group in (degs[:n_prompt], degs[n_prompt:]):
         mean = float(group.mean()) if len(group) else 0.0
@@ -66,10 +32,17 @@ def _role_weighted_cv(degs: np.ndarray, n_prompt: int) -> float:
     return sum(n * cv for n, cv in parts) / total
 
 
-def collect(cluster: Cluster, policy: str, num_cores: int,
-            rate_rps: float,
-            scenario: str = "conversation-poisson",
-            router: str = "jsq") -> ExperimentMetrics:
+def collect(cluster: Cluster, cfg: ExperimentConfig,
+            carbon_model: CarbonModel | None = None) -> ExperimentResult:
+    """Aggregate a finished cluster run into an `ExperimentResult`.
+
+    The config supplies the experiment identity (policy / scenario /
+    router / carbon model + opts) and the provenance fingerprint; the
+    pre-PR-5 `collect(cluster, policy, num_cores, rate_rps, ...)`
+    keyword pile is gone. `carbon_model` lets a caller that already
+    resolved `cfg.carbon_model` (e.g. `run_experiment`'s fail-fast
+    check) pass it in instead of constructing it twice.
+    """
     cvs, degs, idle_all = [], [], []
     task_samples = []
     for m in cluster.machines:
@@ -93,22 +66,25 @@ def collect(cluster: Cluster, policy: str, num_cores: int,
     all_tasks = np.concatenate(task_samples) if task_samples else np.zeros(1)
 
     # Fleet-level aging imbalance + per-machine embodied carbon vs the
-    # worst-case linear-aging reference at the same horizon.
+    # worst-case linear-aging reference at the same horizon, priced by
+    # the experiment's configured carbon model.
     fleet_cv = _role_weighted_cv(degs, len(cluster.prompt_instances))
     elapsed = max(m.manager.now for m in cluster.machines)
-    deg_ref = carbon.reference_degradation(
+    deg_ref = reference_degradation(
         cluster.machines[0].manager.params, elapsed)
-    per_machine_carbon = [carbon.estimate(deg_ref, max(float(d), 0.0))
-                          for d in degs]
+    model = carbon_model if carbon_model is not None else \
+        get_carbon_model(cfg.carbon_model, **cfg.carbon_options)
+    per_machine_carbon = tuple(model.lifetime(deg_ref, max(float(d), 0.0))
+                               for d in degs)
 
     def pct(x):
         return {p: float(np.percentile(x, p)) for p in PERCENTILES}
 
-    return ExperimentMetrics(
-        policy=policy,
-        num_cores=num_cores,
-        rate_rps=rate_rps,
-        scenario=scenario,
+    return ExperimentResult(
+        policy=cfg.policy,
+        num_cores=cfg.num_cores,
+        rate_rps=cfg.rate_rps,
+        scenario=cfg.scenario,
         freq_cv_percentiles=pct(cvs),
         mean_degradation_percentiles=pct(degs),
         idle_norm_percentiles=pct(idle_all),
@@ -118,24 +94,45 @@ def collect(cluster: Cluster, policy: str, num_cores: int,
         mean_latency_s=mean_latency,
         p99_latency_s=p99_latency,
         completed=len(cluster.completed),
-        router=router,
+        router=cfg.router,
+        carbon_model=cfg.carbon_model,
+        carbon_opts=cfg.carbon_opts,
         fleet_degradation_cv=fleet_cv,
         per_machine_carbon=per_machine_carbon,
         fleet_yearly_kgco2eq=float(sum(e.yearly_kgco2eq
                                        for e in per_machine_carbon)),
-        per_machine_cv=cvs,
-        per_machine_degradation=degs,
-        per_machine_idle_norm=[np.asarray(m.manager.metrics.idle_norm_samples)
-                               for m in cluster.machines],
-        per_machine_task_samples=task_samples,
+        deg_reference=float(deg_ref),
+        per_machine_cv=tuple(float(x) for x in cvs),
+        per_machine_degradation=tuple(float(x) for x in degs),
+        per_machine_idle_norm=tuple(
+            tuple(float(x) for x in m.manager.metrics.idle_norm_samples)
+            for m in cluster.machines),
+        per_machine_task_samples=tuple(
+            tuple(int(x) for x in samples) for samples in task_samples),
+        provenance=Provenance(config_hash=cfg.fingerprint(),
+                              seed=cfg.seed),
     )
 
 
-def carbon_comparison(linux_metrics: ExperimentMetrics,
-                      technique_metrics: ExperimentMetrics,
-                      percentile: int = 99) -> carbon.CarbonEstimate:
+def carbon_comparison(linux_metrics: ExperimentResult,
+                      technique_metrics: ExperimentResult,
+                      percentile: int = 99,
+                      model: str | CarbonModel | None = None,
+                      ) -> LifetimeEstimate:
     """Fig. 7: estimate yearly embodied carbon from the p-th percentile of
-    mean-frequency-degradation performance (paper uses p99 and p50)."""
+    mean-frequency-degradation performance (paper uses p99 and p50).
+
+    `model` selects the carbon model (registry name or instance); the
+    default honours the technique result's own `carbon_model` *and*
+    `carbon_opts`, so a sweep run under `reliability-threshold` — or a
+    custom `embodied_kg` — is compared under exactly that pricing. A
+    name passed explicitly is built with default opts.
+    """
+    if model is None:
+        model = get_carbon_model(technique_metrics.carbon_model,
+                                 **dict(technique_metrics.carbon_opts))
+    elif not isinstance(model, CarbonModel):
+        model = get_carbon_model(model)
     deg_linux = linux_metrics.mean_degradation_percentiles[percentile]
     deg_tech = technique_metrics.mean_degradation_percentiles[percentile]
-    return carbon.estimate(deg_linux, deg_tech)
+    return model.lifetime(deg_linux, deg_tech)

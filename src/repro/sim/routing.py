@@ -24,11 +24,11 @@ Built-ins:
                    machine with the freshest host CPU (evens fleet aging)
   carbon-greedy  — EcoServe-style: among load-feasible instances, pick the
                    placement minimizing projected fleet yearly embodied
-                   carbon (`repro.core.carbon.estimate` over per-machine
-                   degradation); NBTI aging is concave in time, so the
-                   marginal carbon of one more task is smallest on the
-                   *most* aged machine — old servers soak up load while
-                   fresh ones amortize slowly.
+                   carbon under a pluggable `repro.carbon` model
+                   (default `linear-extension`); NBTI aging is concave
+                   in time, so the marginal carbon of one more task is
+                   smallest on the *most* aged machine — old servers
+                   soak up load while fresh ones amortize slowly.
 
 Routers are per-cluster objects (they may carry cursors or RNG-driven
 state) and must route through the `FleetView` only — they never see the
@@ -41,7 +41,9 @@ from typing import ClassVar
 
 import numpy as np
 
-from repro.core import aging, carbon, temperature
+from repro.carbon import get_carbon_model, reference_degradation
+from repro.carbon.base import CarbonModel
+from repro.core import aging, temperature
 from repro.registry import Registry, canonical_name
 
 
@@ -305,32 +307,48 @@ class CarbonGreedyRouter(ClusterRouter):
 
     For each load-feasible candidate, project the machine's mean
     degradation after absorbing one more task interval (`tau_s` of
-    active-allocated NBTI stress on its mean dVth) and score the whole
-    fleet with `repro.core.carbon.estimate` against a worst-case
+    active-allocated NBTI stress on its mean dVth) and price the whole
+    fleet with a pluggable `repro.carbon` model against a worst-case
     linear-aging reference at the same horizon. NBTI is concave in
     accumulated stress time, so the marginal carbon of a task is
     smallest on the most-aged machine: carbon-greedy concentrates load
     on old CPUs and shelters fresh ones — the opposite of
     `least-aged-cpu`, and the trade EcoServe exploits.
+
+    `carbon_model` is a registry name (or `CarbonModel` instance) with
+    `carbon_opts` for its constructor; the default `linear-extension`
+    is bit-exact with the pre-subsystem hard-coded scoring, and
+    `reliability-threshold` sharpens the concavity (steeper marginal
+    differences between fresh and aged machines).
     """
 
-    def __init__(self, slack: int = 2, tau_s: float = 0.01):
+    def __init__(self, slack: int = 2, tau_s: float = 0.01,
+                 carbon_model="linear-extension", carbon_opts=None):
         if slack < 0:
             raise ValueError(f"slack must be >= 0, got {slack}")
         if tau_s <= 0.0:
             raise ValueError(f"tau_s must be > 0, got {tau_s}")
         self.slack = slack
         self.tau_s = tau_s
+        if isinstance(carbon_model, CarbonModel):
+            if carbon_opts:
+                raise TypeError("carbon_opts only apply when carbon_model "
+                                "is a registry name, got an instance")
+            self.carbon_model = carbon_model
+        else:
+            self.carbon_model = get_carbon_model(carbon_model,
+                                                 **(carbon_opts or {}))
 
     def _select(self, fleet: FleetView, loads, snapshot) -> int:
         cand = _feasible(loads, self.slack)
         if len(cand) == 1:
             return int(cand[0])
         params = fleet.aging_params
-        deg_ref = carbon.reference_degradation(params, fleet.now)
+        deg_ref = reference_degradation(params, fleet.now)
         adf_active = params.K * aging.adf_unscaled_cached(
             params, temperature.TEMP_ACTIVE_ALLOCATED_C,
             temperature.STRESS_ACTIVE)
+        lifetime = self.carbon_model.lifetime
         # Fleet totals across candidates share every j != i term, so the
         # argmin over projected fleet carbon reduces to the candidate's
         # own marginal increase.
@@ -340,9 +358,8 @@ class CarbonGreedyRouter(ClusterRouter):
                 params, s.mean_dvth, adf_active, self.tau_s)
             deg_next = s.mean_degradation \
                 + s.mean_f0 * (dvth_next - s.mean_dvth) / params.headroom
-            delta = (carbon.estimate(deg_ref, max(deg_next, 0.0))
-                     .yearly_kgco2eq
-                     - carbon.estimate(deg_ref, max(s.mean_degradation, 0.0))
+            delta = (lifetime(deg_ref, max(deg_next, 0.0)).yearly_kgco2eq
+                     - lifetime(deg_ref, max(s.mean_degradation, 0.0))
                      .yearly_kgco2eq)
             if delta < best_delta:
                 best, best_delta = int(i), delta

@@ -23,33 +23,42 @@ router)`:
                             routers=("jsq", "least-aged-cpu",
                                      "carbon-greedy"))
     grid[("proposed", "conversation-mmpp", "carbon-greedy")]
+
+The sweep returns a `SweepResult` — a read-only mapping with the same
+keys as the dict it historically returned, plus `save`/`load`/`to_rows`
+so grids persist and diff across runs (see `repro.sim.results`).
 """
 from __future__ import annotations
 
+from repro.carbon import get_carbon_model
 from repro.core.policies import canonical_policy_name
 from repro.sim import metrics as metrics_mod
 from repro.sim.cluster import Cluster
 from repro.sim.config import ExperimentConfig
+from repro.sim.results import ExperimentResult, SweepResult
 from repro.sim.routing import canonical_router_name
 from repro.workloads import canonical_scenario_name, get_scenario
 
 DEFAULT_SWEEP = ("linux", "least-aged", "proposed")
 
 
-def run_experiment(cfg: ExperimentConfig) -> metrics_mod.ExperimentMetrics:
+def run_experiment(cfg: ExperimentConfig) -> ExperimentResult:
     if not isinstance(cfg, ExperimentConfig):
         raise TypeError(
             "run_experiment takes an ExperimentConfig (the pre-registry "
             "run_experiment(policy, **kwargs) signature was removed); "
             f"got {cfg!r}")
+    # Resolve every axis up front so a typo'd name fails before the
+    # simulation runs, not after (policy and router resolve inside
+    # Cluster.__init__ below); the resolved carbon model is handed to
+    # `collect`, which would otherwise construct it a second time.
+    carbon_model = get_carbon_model(cfg.carbon_model, **cfg.carbon_options)
     scenario = get_scenario(cfg.scenario, **cfg.scenario_options)
     trace = scenario.generate(rate_rps=cfg.rate_rps,
                               duration_s=cfg.duration_s, seed=cfg.seed)
     cluster = Cluster(cfg)
     cluster.run(trace, cfg.duration_s, sample_period_s=cfg.sample_period_s)
-    return metrics_mod.collect(cluster, cfg.policy, cfg.num_cores,
-                               cfg.rate_rps, scenario=cfg.scenario,
-                               router=cfg.router)
+    return metrics_mod.collect(cluster, cfg, carbon_model=carbon_model)
 
 
 def run_policy_sweep(
@@ -58,7 +67,7 @@ def run_policy_sweep(
     scenarios=None,
     routers=None,
     parallel: int | None = None,
-) -> dict:
+) -> SweepResult:
     """Run the same experiment across policies (x scenarios x routers).
 
     Policies/scenarios/routers are given by registry name. With
@@ -87,6 +96,9 @@ def run_policy_sweep(
         cfg = ExperimentConfig()
     scenario_axis = scenarios is not None
     router_axis = routers is not None
+    axes = (("policy",)
+            + (("scenario",) if scenario_axis else ())
+            + (("router",) if router_axis else ()))
     cells: list[tuple[object, ExperimentConfig]] = []
     for s in (scenarios if scenario_axis else (cfg.scenario,)):
         s_name = canonical_scenario_name(s)
@@ -109,8 +121,9 @@ def run_policy_sweep(
             # `map` preserves submission order, so keys zip back exactly.
             results = list(pool.map(run_experiment,
                                     [c for _, c in cells]))
-        return dict(zip([k for k, _ in cells], results))
-    return {key: run_experiment(run_cfg) for key, run_cfg in cells}
+        return SweepResult(zip([k for k, _ in cells], results), axes=axes)
+    return SweepResult(((key, run_experiment(run_cfg))
+                        for key, run_cfg in cells), axes=axes)
 
 
 def _with_policy(cfg: ExperimentConfig, policy) -> ExperimentConfig:

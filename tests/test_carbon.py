@@ -1,0 +1,610 @@
+"""Carbon-accounting subsystem + structured-results tests.
+
+Golden-pins the `linear-extension` model bit-exactly against the
+pre-subsystem `repro.core.carbon.estimate` outputs, covers the
+reliability-threshold and operational+embodied models with their
+`CarbonIntensity` signals, pins the carbon registry's error wordings in
+parity with the policy / scenario / router axes, and round-trips
+`ExperimentResult` / `SweepResult` through JSON (the acceptance 2x2x2
+grid, provenance included).
+"""
+import dataclasses
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.carbon import (BASELINE_LIFESPAN_YEARS, CPU_EMBODIED_KGCO2EQ,
+                          CarbonModel, ConstantIntensity, DiurnalIntensity,
+                          LifetimeEstimate, MAX_EXTENSION_FACTOR,
+                          NBTI_TIME_EXPONENT, TraceIntensity,
+                          available_carbon_models, estimate,
+                          get_carbon_model, get_intensity,
+                          register_carbon_model)
+from repro.sim import (ExperimentConfig, ExperimentResult, Provenance,
+                       SweepResult, carbon_comparison, run_experiment,
+                       run_policy_sweep)
+
+
+def canon(obj) -> str:
+    """Canonical JSON string — the NaN-safe lossless-equality witness
+    (NaN != NaN under ==, but serializes to the identical token)."""
+    return json.dumps(obj, sort_keys=True)
+
+
+# --------------------------------------------------------------------- #
+# linear-extension: bit-exact re-homing of repro.core.carbon.estimate
+# --------------------------------------------------------------------- #
+class TestLinearExtensionGoldenPin:
+    # Captured from the pre-subsystem repro.core.carbon.estimate at
+    # commit e3b4222 (exact repr of every float; the second case is the
+    # linux/proposed p99 pair of the seed Fig.-7 configuration).
+    GOLD = {
+        (0.02, 0.013): (1.5384615384615385, 4.615384615384616,
+                        60.29833333333333, 92.76666666666667, 0.35),
+        (0.017512094707309137, 0.011416982341791698): (
+            1.533863693841968, 4.601591081525904, 60.47908105465876,
+            92.76666666666667, 0.3480515876249505),
+        (0.01, 0.01): (1.0, 3.0, 92.76666666666667, 92.76666666666667,
+                       0.0),
+        (0.01, 0.0): (100.0, 300.0, 0.9276666666666668, 92.76666666666667,
+                      0.99),
+        (0.0, 0.01): (1e-06, 3e-06, 92766666.66666667,
+                      92.76666666666667, -999999.0000000001),
+    }
+
+    @pytest.mark.parametrize("args", sorted(GOLD))
+    def test_pinned_values(self, args):
+        est = get_carbon_model("linear-extension").lifetime(*args)
+        gold = self.GOLD[args]
+        assert est.extension_factor == gold[0]
+        assert est.extended_life_years == gold[1]
+        assert est.yearly_kgco2eq == gold[2]
+        assert est.baseline_yearly_kgco2eq == gold[3]
+        assert est.reduction_frac == gold[4]
+
+    def test_matches_estimate_wrapper_everywhere(self):
+        """`carbon.estimate` and the registered model must agree
+        bit-exactly across a dense (deg_ref, deg_technique) grid."""
+        model = get_carbon_model("linear-extension")
+        for dl in (0.0, 1e-9, 1e-4, 0.01, 0.0173, 0.3, 1.0):
+            for dt in (0.0, 1e-9, 1e-4, 0.01, 0.0173, 0.3, 1.0):
+                a = estimate(dl, dt)
+                b = model.lifetime(dl, dt)
+                assert a == b, (dl, dt)
+
+    def test_core_carbon_compat_module(self):
+        """The historical `repro.core.carbon` spelling still works and
+        resolves to the same implementation."""
+        from repro.core import carbon as core_carbon
+        assert core_carbon.estimate(0.02, 0.013) == \
+            get_carbon_model("linear-extension").lifetime(0.02, 0.013)
+        assert core_carbon.CarbonEstimate is LifetimeEstimate
+        assert core_carbon.MAX_EXTENSION_FACTOR == MAX_EXTENSION_FACTOR
+
+    def test_halted_aging_uses_named_cap(self):
+        assert MAX_EXTENSION_FACTOR == 100.0
+        est = get_carbon_model("linear-extension").lifetime(0.01, 0.0)
+        assert est.extension_factor == MAX_EXTENSION_FACTOR
+
+    def test_custom_embodied_and_lifespan(self):
+        est = get_carbon_model("linear-extension", embodied_kg=100.0,
+                               base_life_years=5.0).lifetime(0.02, 0.01)
+        assert est.extended_life_years == 10.0
+        assert est.yearly_kgco2eq == 10.0
+        assert est.baseline_life_years == 5.0
+
+    def test_invalid_opts_rejected(self):
+        with pytest.raises(ValueError):
+            get_carbon_model("linear-extension", embodied_kg=0.0)
+        with pytest.raises(TypeError):
+            get_carbon_model("linear-extension", bogus_opt=1)
+
+
+class TestReliabilityThreshold:
+    def test_exponent_matches_aging_params(self):
+        """NBTI_TIME_EXPONENT is deliberately duplicated (the carbon
+        layer must not import repro.core); this pin keeps it in sync
+        with the aging model's default."""
+        from repro.core import aging
+        assert NBTI_TIME_EXPONENT == aging.AgingParams().n
+
+    def test_guardband_inversion_exponent(self):
+        """dVth = ADF * t^n inverts to extension = ratio^(1/n)."""
+        model = get_carbon_model("reliability-threshold")
+        est = model.lifetime(0.011, 0.01)
+        assert est.extension_factor == pytest.approx(
+            1.1 ** (1.0 / NBTI_TIME_EXPONENT), rel=1e-12)
+        assert est.extended_life_years == pytest.approx(
+            BASELINE_LIFESPAN_YEARS * est.extension_factor)
+
+    def test_more_optimistic_than_linear_when_technique_wins(self):
+        lin = get_carbon_model("linear-extension").lifetime(0.02, 0.015)
+        rel = get_carbon_model("reliability-threshold").lifetime(0.02, 0.015)
+        assert rel.extension_factor > lin.extension_factor
+        assert rel.reduction_frac > lin.reduction_frac
+
+    def test_cap_binds(self):
+        model = get_carbon_model("reliability-threshold")
+        assert model.lifetime(0.03, 0.01).extension_factor == \
+            MAX_EXTENSION_FACTOR                       # 3^6 = 729 -> cap
+        assert model.lifetime(0.01, 0.0).extension_factor == \
+            MAX_EXTENSION_FACTOR
+        small = get_carbon_model("reliability-threshold",
+                                 max_extension=5.0)
+        assert small.lifetime(0.03, 0.01).extension_factor == 5.0
+
+    def test_no_improvement_no_saving(self):
+        est = get_carbon_model("reliability-threshold").lifetime(0.01, 0.01)
+        assert est.extension_factor == pytest.approx(1.0)
+        assert est.reduction_frac == pytest.approx(0.0)
+
+    def test_invalid_opts_rejected(self):
+        with pytest.raises(ValueError):
+            get_carbon_model("reliability-threshold", n=0.0)
+        with pytest.raises(ValueError):
+            get_carbon_model("reliability-threshold", max_extension=0.5)
+
+
+# --------------------------------------------------------------------- #
+# intensity signals + operational-embodied total footprint
+# --------------------------------------------------------------------- #
+class TestIntensitySignals:
+    def test_constant(self):
+        ci = ConstantIntensity(120.0)
+        assert ci.g_per_kwh(0.0) == ci.g_per_kwh(1e7) == 120.0
+        assert ci.mean_g_per_kwh() == 120.0
+
+    def test_diurnal_mean_preserving(self):
+        ci = DiurnalIntensity(mean=400.0, amplitude=0.6)
+        values = [ci.g_per_kwh(t) for t in np.linspace(0, 86400, 86400,
+                                                       endpoint=False)]
+        assert ci.mean_g_per_kwh() == 400.0
+        assert np.mean(values) == pytest.approx(400.0, rel=1e-3)
+        assert max(values) == pytest.approx(640.0, rel=1e-3)
+        assert min(values) == pytest.approx(160.0, rel=1e-3)
+
+    def test_diurnal_validation(self):
+        with pytest.raises(ValueError):
+            DiurnalIntensity(mean=400.0, amplitude=1.0)
+        with pytest.raises(ValueError):
+            DiurnalIntensity(mean=400.0, period_s=0.0)
+
+    def test_trace_step_hold_and_cyclic(self):
+        tr = TraceIntensity(times_s=(0.0, 3600.0, 7200.0),
+                            values_g_per_kwh=(100.0, 300.0, 200.0))
+        assert tr.g_per_kwh(0.0) == 100.0
+        assert tr.g_per_kwh(3599.9) == 100.0
+        assert tr.g_per_kwh(3600.0) == 300.0
+        # span = 7200 + mean gap 3600 = 10800; wraps cyclically
+        assert tr.g_per_kwh(10800.0 + 5.0) == 100.0
+        assert tr.mean_g_per_kwh() == pytest.approx(200.0)
+
+    def test_trace_from_csv_and_validation(self):
+        tr = TraceIntensity.from_csv(
+            "time_s,g_per_kwh\n0,50\n1800,150\n")
+        assert tr.mean_g_per_kwh() == pytest.approx(100.0)
+        with pytest.raises(ValueError, match="time_s"):
+            TraceIntensity.from_csv("a,b\n1,2\n")
+        with pytest.raises(ValueError):
+            TraceIntensity(times_s=(10.0,), values_g_per_kwh=(1.0,))
+
+    def test_get_intensity_resolution(self):
+        assert isinstance(get_intensity("constant"), ConstantIntensity)
+        ci = ConstantIntensity(10.0)
+        assert get_intensity(ci) is ci
+        with pytest.raises(KeyError, match="diurnal"):
+            get_intensity("definitely-not-a-signal")
+        with pytest.raises(TypeError):
+            get_intensity(ci, value_g_per_kwh=5.0)
+
+
+class TestOperationalEmbodied:
+    def test_components_sum(self):
+        fp = get_carbon_model("operational-embodied").footprint(0.02, 0.01)
+        assert fp.total_kg == pytest.approx(
+            fp.operational_kg + fp.cpu_embodied_kg + fp.gpu_embodied_kg)
+        assert 0.0 < fp.embodied_frac < 1.0
+
+    def test_embodied_dominates_on_clean_grid(self):
+        """Paper Fig. 1: as grid intensity falls, embodied carbon
+        becomes the dominant share."""
+        def frac(ci):
+            return get_carbon_model(
+                "operational-embodied", intensity="constant",
+                intensity_opts={"value_g_per_kwh": ci},
+            ).footprint(0.01, 0.01).embodied_frac
+        assert frac(12.0) > frac(436.0) > frac(820.0)
+
+    def test_lifetime_delegates_to_wrapped_model(self):
+        oe = get_carbon_model("operational-embodied",
+                              lifetime_model="reliability-threshold")
+        direct = get_carbon_model("reliability-threshold")
+        assert oe.lifetime(0.02, 0.015) == direct.lifetime(0.02, 0.015)
+
+    def test_aging_management_cuts_embodied_component_only(self):
+        model = get_carbon_model("operational-embodied")
+        base = model.footprint(0.01, 0.01)
+        managed = model.footprint(0.02, 0.01)   # technique halves aging
+        assert managed.cpu_embodied_kg == pytest.approx(
+            base.cpu_embodied_kg / 2.0)
+        assert managed.operational_kg == base.operational_kg
+        assert managed.gpu_embodied_kg == base.gpu_embodied_kg
+
+    def test_diurnal_signal_prices_its_mean(self):
+        flat = get_carbon_model(
+            "operational-embodied", intensity="constant",
+            intensity_opts={"value_g_per_kwh": 250.0}).footprint(0.01, 0.01)
+        swung = get_carbon_model(
+            "operational-embodied", intensity="diurnal",
+            intensity_opts={"mean": 250.0, "amplitude": 0.8},
+        ).footprint(0.01, 0.01)
+        assert swung.operational_kg == pytest.approx(flat.operational_kg)
+
+    def test_utilization_override(self):
+        model = get_carbon_model("operational-embodied", utilization=0.6)
+        assert model.footprint(0.01, 0.01, utilization=0.3).operational_kg \
+            == pytest.approx(model.footprint(0.01, 0.01).operational_kg / 2)
+
+
+# --------------------------------------------------------------------- #
+# registry parity with the policy / scenario / router axes
+# --------------------------------------------------------------------- #
+def _axis_params():
+    from repro.carbon import registry as carbon_reg
+    from repro.core.policies import CorePolicy
+    from repro.core.policies import registry as policy_reg
+    from repro.sim import routing as router_reg
+    from repro.workloads import registry as scenario_reg
+
+    def subclass_of(base):
+        return lambda: type("Imposter", (base,), {})
+
+    return [
+        pytest.param(policy_reg._POLICIES, "core policy",
+                     subclass_of(CorePolicy), id="policy"),
+        pytest.param(scenario_reg._SCENARIOS, "workload scenario",
+                     lambda: (lambda: None), id="scenario"),
+        pytest.param(router_reg._ROUTERS, "cluster router",
+                     subclass_of(router_reg.ClusterRouter), id="router"),
+        pytest.param(carbon_reg._MODELS, "carbon model",
+                     subclass_of(CarbonModel), id="carbon"),
+    ]
+
+
+class TestRegistryParity:
+    """The four axes share `repro.registry.Registry`; their pinned error
+    wordings must keep the same shape, byte for byte."""
+
+    @pytest.mark.parametrize("reg,kind,imposter", _axis_params())
+    def test_unknown_name_wording(self, reg, kind, imposter):
+        with pytest.raises(KeyError) as err:
+            reg.get("definitely-not-registered")
+        assert err.value.args[0] == (
+            f"unknown {kind} 'definitely-not-registered'; available: "
+            f"{', '.join(reg.available())}")
+
+    @pytest.mark.parametrize("reg,kind,imposter", _axis_params())
+    def test_duplicate_name_wording(self, reg, kind, imposter):
+        taken = reg.available()[0]
+        prev = reg.store[taken]
+        prev_desc = (repr(getattr(prev, "__name__", prev))
+                     if reg.quote_prev else prev.__name__)
+        with pytest.raises(ValueError) as err:
+            reg.register(taken)(imposter())
+        assert err.value.args[0] == (
+            f"{reg.noun} name {taken!r} already registered to {prev_desc}")
+
+    def test_unknown_carbon_model_lists_builtins(self):
+        with pytest.raises(KeyError, match="linear-extension"):
+            get_carbon_model("definitely-not-a-model")
+
+    def test_decorator_rejects_non_model(self):
+        with pytest.raises(TypeError) as err:
+            register_carbon_model("bogus")(object)
+        assert err.value.args[0] == (
+            "@register_carbon_model('bogus') expects a CarbonModel "
+            f"subclass, got {object!r}")
+
+    def test_builtins_present(self):
+        assert {"linear-extension", "reliability-threshold",
+                "operational-embodied"} <= set(available_carbon_models())
+
+    def test_fresh_instance_per_call(self):
+        assert get_carbon_model("linear-extension") is not \
+            get_carbon_model("linear-extension")
+
+    def test_name_normalization(self):
+        a = get_carbon_model("Linear_Extension")
+        assert type(a) is type(get_carbon_model("linear-extension"))
+
+    def test_custom_model_registers_and_prices(self):
+        @register_carbon_model("test-flat")
+        class Flat(CarbonModel):
+            def lifetime(self, deg_ref, deg_technique):
+                return LifetimeEstimate(1.0, 3.0, 1.0, 1.0, 0.0,
+                                        model=self.name)
+
+        try:
+            m = run_experiment(ExperimentConfig(
+                rate_rps=30, duration_s=4, seed=0,
+                carbon_model="test-flat"))
+            assert m.carbon_model == "test-flat"
+            assert m.fleet_yearly_kgco2eq == pytest.approx(22.0)
+            assert all(e.model == "test-flat"
+                       for e in m.per_machine_carbon)
+        finally:
+            from repro.carbon import registry
+            registry._REGISTRY.pop("test-flat", None)
+
+
+class TestRegistryParityDuplicateCheck:
+    def test_duplicate_builtin_rejected(self):
+        with pytest.raises(ValueError, match="already registered"):
+            @register_carbon_model("linear-extension")
+            class Imposter(CarbonModel):
+                pass
+
+
+# --------------------------------------------------------------------- #
+# ExperimentConfig carbon axis + experiment wiring
+# --------------------------------------------------------------------- #
+class TestConfigCarbonAxis:
+    def test_canonicalization_and_with(self):
+        cfg = ExperimentConfig(carbon_model="Reliability_Threshold",
+                               carbon_opts={"max_extension": 10.0})
+        assert cfg.carbon_model == "reliability-threshold"
+        assert cfg.carbon_options == {"max_extension": 10.0}
+        cfg2 = cfg.with_carbon_model("linear-extension")
+        assert cfg2.carbon_model == "linear-extension"
+        assert cfg2.carbon_opts == ()
+
+    def test_fingerprint_tracks_carbon_axis(self):
+        cfg = ExperimentConfig()
+        assert cfg.fingerprint() != \
+            cfg.with_carbon_model("reliability-threshold").fingerprint()
+        assert cfg.fingerprint() == ExperimentConfig().fingerprint()
+
+    def test_experiment_prices_with_configured_model(self):
+        cfg = ExperimentConfig(rate_rps=30, duration_s=4, seed=0)
+        lin = run_experiment(cfg)
+        rel = run_experiment(
+            cfg.with_carbon_model("reliability-threshold"))
+        assert lin.carbon_model == "linear-extension"
+        assert rel.carbon_model == "reliability-threshold"
+        # same simulation -> identical aging; only the pricing differs
+        assert rel.mean_degradation_percentiles == \
+            lin.mean_degradation_percentiles
+        assert rel.fleet_yearly_kgco2eq != lin.fleet_yearly_kgco2eq
+
+    def test_carbon_comparison_honours_result_model(self):
+        cfg = ExperimentConfig(rate_rps=30, duration_s=4, seed=0,
+                               carbon_model="reliability-threshold")
+        sweep = run_policy_sweep(cfg, policies=("linux", "proposed"))
+        est = carbon_comparison(sweep["linux"], sweep["proposed"], 99)
+        assert est.model == "reliability-threshold"
+        lin = carbon_comparison(sweep["linux"], sweep["proposed"], 99,
+                                model="linear-extension")
+        assert lin.model == "linear-extension"
+        # explicit model reproduces the historical default bit-exactly
+        assert lin == estimate(
+            sweep["linux"].mean_degradation_percentiles[99],
+            sweep["proposed"].mean_degradation_percentiles[99])
+
+    def test_fleet_yearly_under_reprices_exactly(self):
+        """Repricing saved degradation data under the result's own model
+        must reproduce the collected fleet total bit for bit (fig7's
+        one-simulation-many-models path relies on this), and a typo'd
+        carbon model must fail before the simulation runs."""
+        m = run_experiment(ExperimentConfig(rate_rps=30, duration_s=4,
+                                            seed=0))
+        assert m.deg_reference is not None and m.deg_reference > 0
+        assert m.fleet_yearly_under() == m.fleet_yearly_kgco2eq
+        assert m.fleet_yearly_under("linear-extension") == \
+            m.fleet_yearly_kgco2eq
+        rel = m.fleet_yearly_under("reliability-threshold")
+        assert rel != m.fleet_yearly_kgco2eq and rel > 0
+        back = ExperimentResult.from_json(m.to_json())
+        assert back.fleet_yearly_under("linear-extension") == \
+            m.fleet_yearly_kgco2eq
+        with pytest.raises(KeyError, match="linear-extension"):
+            run_experiment(ExperimentConfig(
+                duration_s=4, carbon_model="liner-extension"))
+
+    def test_carbon_comparison_honours_result_opts(self):
+        """Regression: a sweep priced with custom carbon_opts must be
+        compared under those same opts by default, and the opts must
+        survive the JSON round-trip."""
+        cfg = ExperimentConfig(rate_rps=30, duration_s=4, seed=0,
+                               carbon_opts={"embodied_kg": 500.0})
+        sweep = run_policy_sweep(cfg, policies=("linux", "proposed"))
+        assert sweep["proposed"].carbon_opts == (("embodied_kg", 500.0),)
+        est = carbon_comparison(sweep["linux"], sweep["proposed"], 99)
+        assert est.baseline_yearly_kgco2eq == pytest.approx(500.0 / 3.0)
+        back = ExperimentResult.from_json(sweep["proposed"].to_json())
+        assert back.carbon_opts == (("embodied_kg", 500.0),)
+        # opts-priced results re-price under their own opts by default
+        assert sweep["proposed"].fleet_yearly_under() == \
+            sweep["proposed"].fleet_yearly_kgco2eq
+
+    def test_schema_version_checked_on_load(self):
+        m = run_experiment(ExperimentConfig(rate_rps=30, duration_s=4,
+                                            seed=0))
+        d = m.to_dict()
+        d["schema"] = 99
+        with pytest.raises(ValueError, match="unsupported result schema"):
+            ExperimentResult.from_dict(d)
+        with pytest.raises(ValueError, match="unsupported result schema"):
+            SweepResult.from_dict({"schema": 99, "axes": ["policy"],
+                                   "cells": []})
+
+    def test_structured_carbon_opts_roundtrip(self):
+        """Tuple-valued opts must come back as tuples (JSON arrays are
+        re-tuplified), preserving dataclass equality."""
+        m = run_experiment(ExperimentConfig(rate_rps=30, duration_s=4,
+                                            seed=0))
+        r = dataclasses.replace(
+            m, carbon_opts=(("intensity_opts",
+                             {"times_s": (0.0, 3600.0)}),))
+        back = ExperimentResult.from_json(r.to_json())
+        assert back.carbon_opts == r.carbon_opts
+
+    def test_carbon_greedy_router_takes_model_opt(self):
+        from repro.sim import get_router
+        r = get_router("carbon-greedy",
+                       carbon_model="reliability-threshold")
+        assert r.carbon_model.name == "reliability-threshold"
+        with pytest.raises(TypeError):
+            get_router("carbon-greedy",
+                       carbon_model=get_carbon_model("linear-extension"),
+                       carbon_opts={"embodied_kg": 1.0})
+
+
+# --------------------------------------------------------------------- #
+# ExperimentResult / SweepResult serialization
+# --------------------------------------------------------------------- #
+class TestExperimentResultRoundTrip:
+    def test_real_result_roundtrip(self):
+        m = run_experiment(ExperimentConfig(rate_rps=30, duration_s=4,
+                                            seed=0))
+        back = ExperimentResult.from_json(m.to_json())
+        assert canon(back.to_dict()) == canon(m.to_dict())
+        assert back.provenance == m.provenance
+        assert back.per_machine_carbon == m.per_machine_carbon
+        assert isinstance(back.freq_cv_percentiles, dict)
+        assert all(isinstance(k, int) for k in back.freq_cv_percentiles)
+
+    def test_result_is_frozen(self):
+        m = run_experiment(ExperimentConfig(rate_rps=30, duration_s=4,
+                                            seed=0))
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            m.completed = 0
+
+    def test_nan_fields_survive(self):
+        from repro.sim import Cluster, collect
+        cfg = ExperimentConfig(duration_s=4.0)
+        cluster = Cluster(cfg)
+        cluster.run([], 4.0)
+        m = collect(cluster, cfg)
+        assert math.isnan(m.mean_latency_s)
+        back = ExperimentResult.from_json(m.to_json())
+        assert math.isnan(back.mean_latency_s)
+        assert canon(back.to_dict()) == canon(m.to_dict())
+
+    def test_property_roundtrip(self):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        finite = st.floats(allow_nan=False, allow_infinity=False,
+                           width=64)
+        metric = st.one_of(finite, st.just(float("nan")))
+        pct = st.fixed_dictionaries({p: finite
+                                     for p in (1, 25, 50, 75, 90, 99)})
+
+        @given(pcts=st.tuples(pct, pct, pct),
+               scalars=st.tuples(metric, metric, metric, metric),
+               ints=st.tuples(st.integers(0, 10**6), st.integers(0, 10**6)),
+               degs=st.lists(finite, min_size=1, max_size=4),
+               seed=st.integers(0, 2**31))
+        @settings(max_examples=60, deadline=None)
+        def run(pcts, scalars, ints, degs, seed):
+            carbon = tuple(estimate(abs(d) + 1e-6, 1e-3) for d in degs)
+            r = ExperimentResult(
+                policy="proposed", num_cores=40, rate_rps=60.0,
+                scenario="conversation-poisson",
+                freq_cv_percentiles=pcts[0],
+                mean_degradation_percentiles=pcts[1],
+                idle_norm_percentiles=pcts[2],
+                oversub_frac_below=scalars[0],
+                task_count_mean=scalars[1],
+                mean_latency_s=scalars[2],
+                p99_latency_s=scalars[3],
+                task_count_max=ints[0], completed=ints[1],
+                per_machine_carbon=carbon,
+                per_machine_degradation=tuple(degs),
+                per_machine_idle_norm=((0.5, -0.1), (1.0,)),
+                per_machine_task_samples=((1, 2, 3), (0,)),
+                provenance=Provenance(config_hash="abc123def456",
+                                      seed=seed))
+            back = ExperimentResult.from_json(r.to_json())
+            assert canon(back.to_dict()) == canon(r.to_dict())
+
+        run()
+
+
+class TestSweepResultAcceptance:
+    """ISSUE acceptance: a 2x2x2 policy x scenario x router grid must
+    save -> load -> to_rows losslessly with provenance intact."""
+
+    @pytest.fixture(scope="class")
+    def grid(self):
+        return run_policy_sweep(
+            ExperimentConfig(rate_rps=30, duration_s=5, seed=0),
+            policies=("linux", "proposed"),
+            scenarios=("conversation-poisson", "conversation-mmpp"),
+            routers=("jsq", "round-robin"))
+
+    def test_mapping_surface(self, grid):
+        assert isinstance(grid, SweepResult)
+        assert grid.axes == ("policy", "scenario", "router")
+        assert len(grid) == 8
+        key = ("proposed", "conversation-mmpp", "jsq")
+        assert grid[key].policy == "proposed"
+        assert set(k[0] for k in grid) == {"linux", "proposed"}
+
+    def test_save_load_lossless(self, grid, tmp_path):
+        path = str(tmp_path / "grid.json")
+        grid.save(path)
+        back = SweepResult.load(path)
+        assert back.axes == grid.axes
+        assert list(back) == list(grid)
+        for key in grid:
+            assert canon(back[key].to_dict()) == canon(grid[key].to_dict())
+            assert back[key].provenance == grid[key].provenance
+            assert back[key].provenance.config_hash
+            assert back[key].provenance.seed == 0
+
+    def test_to_rows(self, grid):
+        rows = grid.to_rows()
+        assert len(rows) == 8
+        for row, key in zip(rows, grid):
+            assert (row["policy"], row["scenario"], row["router"]) == key
+            assert row["config_hash"]
+            assert "mean_degradation_p99" in row
+            assert "fleet_yearly_kgco2eq" in row
+            # per-machine detail stays out of the diffable view
+            assert "per_machine_carbon" not in row
+
+    def test_diff_scalars_self_empty(self, grid, tmp_path):
+        path = str(tmp_path / "grid.json")
+        grid.save(path)
+        back = SweepResult.load(path)
+        assert grid.diff_scalars(back) == {}
+
+    def test_diff_scalars_reports_missing_cells(self, grid):
+        """A dropped grid cell must diff as a diff in both directions —
+        the CI drift check relies on `diff == {}` meaning nothing
+        moved, cells included."""
+        dropped = next(iter(grid))
+        subset = SweepResult([(k, grid[k]) for k in grid if k != dropped],
+                             axes=grid.axes)
+        assert grid.diff_scalars(subset) == \
+            {dropped: {"_cell": ("present", "missing")}}
+        assert subset.diff_scalars(grid) == \
+            {dropped: {"_cell": ("missing", "present")}}
+
+    def test_key_arity_validated(self, grid):
+        with pytest.raises(ValueError, match="axes"):
+            SweepResult([(("a", "b"), next(iter(grid.values())))],
+                        axes=("policy",))
+        with pytest.raises(TypeError):
+            SweepResult([("linux", "not-a-result")], axes=("policy",))
+
+    def test_single_axis_sweep_keys(self):
+        sweep = run_policy_sweep(
+            ExperimentConfig(rate_rps=30, duration_s=4, seed=0),
+            policies=("linux",))
+        assert sweep.axes == ("policy",)
+        assert set(sweep) == {"linux"}
+        assert sweep["linux"].completed > 0

@@ -174,8 +174,7 @@ class TestFleetMetrics:
         cfg = ExperimentConfig(duration_s=5.0)
         cluster = Cluster(cfg)
         cluster.run([], 5.0)
-        m = collect(cluster, cfg.policy, cfg.num_cores, cfg.rate_rps,
-                    router=cfg.router)
+        m = collect(cluster, cfg)
         assert m.completed == 0
         assert math.isnan(m.mean_latency_s)
         assert math.isnan(m.p99_latency_s)

@@ -2,9 +2,9 @@
 import numpy as np
 import pytest
 
-from repro.sim import (EventQueue, ExperimentConfig, TraceConfig,
-                       carbon_comparison, generate, run_experiment,
-                       run_policy_sweep, trace_stats)
+from repro.sim import (EventQueue, ExperimentConfig, carbon_comparison,
+                       run_experiment, run_policy_sweep)
+from repro.workloads import get_scenario, request_stats
 
 
 class TestEventQueue:
@@ -42,20 +42,22 @@ class TestEventQueue:
 
 class TestTrace:
     def test_deterministic(self):
-        a = generate(TraceConfig(seed=3, duration_s=20))
-        b = generate(TraceConfig(seed=3, duration_s=20))
+        sc = get_scenario("conversation-poisson")
+        a = sc.generate(rate_rps=60, duration_s=20, seed=3)
+        b = sc.generate(rate_rps=60, duration_s=20, seed=3)
         assert a == b
 
     def test_statistics_match_azure_characterization(self):
         """Synthesized traces must match the Splitwise Azure-conversation
         characterization: input median ~1020, output mean ~211 tokens."""
-        stats = trace_stats(generate(TraceConfig(rate_rps=200, duration_s=120,
-                                                 seed=0)))
+        stats = request_stats(get_scenario("conversation-poisson").generate(
+            rate_rps=200, duration_s=120, seed=0))
         assert 800 < stats["input_median"] < 1300
         assert 150 < stats["output_mean"] < 300
 
     def test_rate_respected(self):
-        reqs = generate(TraceConfig(rate_rps=50, duration_s=100, seed=1))
+        reqs = get_scenario("conversation-poisson").generate(
+            rate_rps=50, duration_s=100, seed=1)
         assert len(reqs) == pytest.approx(5000, rel=0.1)
         assert all(0 <= r.arrival_s < 100 for r in reqs)
 
@@ -163,11 +165,12 @@ class TestClusterEndToEnd:
         assert done_at["B"] < work / s0 * OVERSUB_SLOWDOWN
         assert m.running_cpu_tasks == 0 and not m._oversub_inflight
 
-    def test_legacy_trace_shim_matches_scenario(self):
-        """The deprecated TraceConfig path must resolve to the
-        conversation-poisson scenario bit-exactly."""
-        from repro.workloads import get_scenario
-        with pytest.deprecated_call():
-            legacy = generate(TraceConfig(rate_rps=40, duration_s=20, seed=5))
-        assert legacy == get_scenario("conversation-poisson").generate(
-            rate_rps=40, duration_s=20, seed=5)
+    def test_legacy_trace_shims_removed(self):
+        """The deprecated `sim.trace` TraceConfig/generate/trace_stats
+        shims are gone (ROADMAP: remove once nothing imports them);
+        `repro.workloads` is the only workload spelling."""
+        import repro.sim as sim
+        for name in ("TraceConfig", "generate", "trace_stats"):
+            assert not hasattr(sim, name), name
+        with pytest.raises(ImportError):
+            import repro.sim.trace  # noqa: F401

@@ -143,13 +143,12 @@ class TestLegacyBitExactness:
         assert reqs[0].output_tokens == LEGACY_GOLD["first_out"]
         assert sum(r.input_tokens for r in reqs) == LEGACY_GOLD["sum_in"]
 
-    def test_traceconfig_shim_resolves_to_scenario(self):
-        from repro.sim import TraceConfig, generate
-        with pytest.deprecated_call():
-            legacy = generate(TraceConfig(rate_rps=60, duration_s=20,
-                                          seed=3))
-        assert legacy == get_scenario("conversation-poisson").generate(
-            rate_rps=60, duration_s=20, seed=3)
+    def test_traceconfig_shim_removed(self):
+        """PR 2's deprecated TraceConfig/generate shims are gone; the
+        bit-exactness contract lives on in
+        `test_conversation_poisson_matches_seed_generator`."""
+        with pytest.raises(ImportError):
+            from repro.sim import TraceConfig  # noqa: F401
 
 
 class TestMixStatistics:
@@ -356,13 +355,9 @@ class TestRequestStats:
         assert all(v == 0 for v in stats.values())
         assert not any(np.isnan(v) for v in stats.values())
 
-    def test_trace_stats_shim_warns_and_keeps_legacy_keys(self):
-        from repro.sim import trace_stats
-        with pytest.deprecated_call():
-            stats = trace_stats([])
-        assert stats == {"n_requests": 0, "input_median": 0.0,
-                         "input_mean": 0.0, "output_mean": 0.0,
-                         "output_median": 0.0}
+    def test_trace_stats_shim_removed(self):
+        with pytest.raises(ImportError):
+            from repro.sim import trace_stats  # noqa: F401
 
     def test_basic_stats(self):
         reqs = [Request(0, 1.0, 100, 10), Request(1, 2.0, 300, 30)]
