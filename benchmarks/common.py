@@ -11,6 +11,7 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments")
 DEFAULT_SCENARIOS = ("conversation-poisson",)
 DEFAULT_ROUTERS = ("jsq",)
 DEFAULT_CARBON_MODELS = ("linear-extension",)
+DEFAULT_POWER_MODELS = ("flat-tdp",)
 
 
 def add_scenario_arg(parser: argparse.ArgumentParser) -> None:
@@ -52,6 +53,19 @@ def resolve_carbon_models(args: argparse.Namespace) -> tuple[str, ...]:
         else DEFAULT_CARBON_MODELS
 
 
+def add_power_model_arg(parser: argparse.ArgumentParser) -> None:
+    parser.add_argument(
+        "--power-model", action="append", default=None, metavar="NAME",
+        help="power model pricing per-core residencies into energy "
+        f"(fig7); repeatable; default {DEFAULT_POWER_MODELS[0]}. See "
+        "repro.power.available_power_models()")
+
+
+def resolve_power_models(args: argparse.Namespace) -> tuple[str, ...]:
+    return tuple(args.power_model) if getattr(args, "power_model", None) \
+        else DEFAULT_POWER_MODELS
+
+
 def parse_scenarios(description: str | None = None) -> tuple[str, ...]:
     """One-stop argparse for the fig drivers' `__main__` blocks."""
     ap = argparse.ArgumentParser(description=description)
@@ -60,17 +74,21 @@ def parse_scenarios(description: str | None = None) -> tuple[str, ...]:
 
 
 def parse_axes(description: str | None = None,
-               carbon: bool = False) -> tuple:
+               carbon: bool = False, power: bool = False) -> tuple:
     """argparse for drivers that sweep scenarios and routers; with
-    `carbon=True` the carbon-model axis joins the returned tuple."""
+    `carbon=True` / `power=True` those accounting axes join the
+    returned tuple (in that order)."""
     ap = argparse.ArgumentParser(description=description)
     add_scenario_arg(ap)
     add_router_arg(ap)
     if carbon:
         add_carbon_model_arg(ap)
+    if power:
+        add_power_model_arg(ap)
     args = ap.parse_args()
     axes = (resolve_scenarios(args), resolve_routers(args))
-    return axes + ((resolve_carbon_models(args),) if carbon else ())
+    axes += ((resolve_carbon_models(args),) if carbon else ())
+    return axes + ((resolve_power_models(args),) if power else ())
 
 
 def emit(name: str, rows: list[dict]) -> None:

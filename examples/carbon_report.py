@@ -3,16 +3,20 @@
 <10% oversubscription.
 
   PYTHONPATH=src python examples/carbon_report.py [--duration 300]
-      [--carbon-model reliability-threshold] [--save sweep.json]
+      [--carbon-model reliability-threshold] [--power-model minmax-linear]
+      [--save sweep.json]
 
 `--carbon-model` re-prices the aging data under any registered
-`repro.carbon` model; `--save` persists the whole sweep as a
+`repro.carbon` model; `--power-model` prices per-core state residencies
+into measured energy/operational carbon under any registered
+`repro.power` model; `--save` persists the whole sweep as a
 `SweepResult` JSON that `repro.sim.SweepResult.load` restores
 losslessly (provenance included) for cross-run diffs.
 """
 import argparse
 
 from repro.carbon import get_carbon_model
+from repro.carbon.models import HOURS_PER_YEAR
 from repro.sim import ExperimentConfig, carbon_comparison, run_policy_sweep
 
 
@@ -27,6 +31,9 @@ def main() -> None:
     ap.add_argument("--carbon-model", default="linear-extension",
                     help="carbon-accounting model (see "
                     "repro.carbon.available_carbon_models())")
+    ap.add_argument("--power-model", default="flat-tdp",
+                    help="power model pricing per-core residencies into "
+                    "energy (see repro.power.available_power_models())")
     ap.add_argument("--intensity", type=float, default=436.0,
                     help="grid carbon intensity [gCO2eq/kWh] for the "
                     "operational+embodied footprint line")
@@ -37,7 +44,7 @@ def main() -> None:
     res = run_policy_sweep(ExperimentConfig(
         num_cores=args.cores, rate_rps=args.rate,
         duration_s=args.duration, seed=1, router=args.router,
-        carbon_model=args.carbon_model))
+        carbon_model=args.carbon_model, power_model=args.power_model))
     linux, proposed = res["linux"], res["proposed"]
 
     print(f"cluster: 22 machines (5 prompt + 17 token), {args.cores}-core "
@@ -62,6 +69,12 @@ def main() -> None:
           f"{proposed.fleet_degradation_cv:.4f}, fleet yearly embodied "
           f"{proposed.fleet_yearly_kgco2eq:.1f} kgCO2eq "
           f"[{args.carbon_model}]")
+    yearly_kwh = proposed.mean_machine_power_w * HOURS_PER_YEAR / 1000.0
+    print(f"power: {args.power_model} — fleet horizon energy "
+          f"{proposed.fleet_energy_kwh:.4f} kWh (mean machine draw "
+          f"{proposed.mean_machine_power_w:.0f} W), fleet yearly "
+          f"operational {proposed.fleet_yearly_operational_kgco2eq:.1f} "
+          f"kgCO2eq, total {proposed.fleet_yearly_total_kgco2eq:.1f}")
 
     deg_l = linux.mean_degradation_percentiles[99]
     deg_p = proposed.mean_degradation_percentiles[99]
@@ -70,7 +83,7 @@ def main() -> None:
         intensity="constant",
         intensity_opts={"value_g_per_kwh": args.intensity},
         lifetime_model=args.carbon_model,
-    ).footprint(deg_l, deg_p)
+    ).footprint(deg_l, deg_p, energy_kwh_per_year=yearly_kwh)
     print(f"per-server total @ {args.intensity:.0f} gCO2/kWh: "
           f"{fp.total_kg:.0f} kgCO2eq/yr (operational "
           f"{fp.operational_kg:.0f}, CPU embodied {fp.cpu_embodied_kg:.1f}, "

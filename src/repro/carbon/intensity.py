@@ -109,11 +109,26 @@ class TraceIntensity(CarbonIntensity):
         if len(times) != len(values) or not times:
             raise ValueError("need equally many sample times and values, "
                              f"got {len(times)}/{len(values)}")
-        if times[0] != 0.0 or any(b <= a for a, b in zip(times, times[1:])):
+        # Power x intensity integration multiplies these values straight
+        # into headline results, so reject bad ingest loudly and point
+        # at the offending sample (NaN fails every comparison below).
+        for i, t in enumerate(times):
+            if not math.isfinite(t):
+                raise ValueError("sample times must be finite, got "
+                                 f"times_s[{i}]={t}")
+        if times[0] != 0.0:
             raise ValueError("sample times must be strictly increasing "
-                             "and start at 0")
-        if any(v < 0.0 for v in values):
-            raise ValueError("intensities must be >= 0")
+                             f"and start at 0; got times_s[0]={times[0]}")
+        for i, (a, b) in enumerate(zip(times, times[1:])):
+            if not b > a:
+                raise ValueError(
+                    "sample times must be strictly increasing and start "
+                    f"at 0; got times_s[{i + 1}]={b} after times_s[{i}]="
+                    f"{a}")
+        for i, v in enumerate(values):
+            if not (math.isfinite(v) and v >= 0.0):
+                raise ValueError("intensities must be finite and >= 0, "
+                                 f"got g_per_kwh[{i}]={v}")
         object.__setattr__(self, "times_s", times)
         object.__setattr__(self, "values_g_per_kwh", values)
         # The last sample holds for the mean inter-sample gap, closing

@@ -192,9 +192,9 @@ class OperationalEmbodiedModel(CarbonModel):
             raise ValueError(f"gpu_life_years must be > 0, got "
                              f"{gpu_life_years}")
         self.intensity: CarbonIntensity = get_intensity(
-            intensity, **(intensity_opts or {}))
+            intensity, **dict(intensity_opts or {}))
         self.lifetime_model: CarbonModel = get_carbon_model(
-            lifetime_model, **(lifetime_opts or {}))
+            lifetime_model, **dict(lifetime_opts or {}))
         self.utilization = utilization
         self.gpu_tdp_w = gpu_tdp_w
         self.other_tdp_w = other_tdp_w
@@ -206,10 +206,23 @@ class OperationalEmbodiedModel(CarbonModel):
         return self.lifetime_model.lifetime(deg_ref, deg_technique)
 
     def footprint(self, deg_ref: float, deg_technique: float,
-                  utilization: float | None = None) -> CarbonFootprint:
-        util = self.utilization if utilization is None else utilization
-        energy_kwh = (self.gpu_tdp_w + self.other_tdp_w) \
-            * util * HOURS_PER_YEAR / 1000.0
+                  utilization: float | None = None,
+                  energy_kwh_per_year: float | None = None
+                  ) -> CarbonFootprint:
+        """Total yearly footprint. `energy_kwh_per_year` feeds MEASURED
+        energy (e.g. an `ExperimentResult`'s power-model accounting,
+        annualized) in place of the flat `tdp * utilization` stand-in;
+        the stand-in remains the default so existing callers keep their
+        exact numbers."""
+        if energy_kwh_per_year is None:
+            util = self.utilization if utilization is None else utilization
+            energy_kwh = (self.gpu_tdp_w + self.other_tdp_w) \
+                * util * HOURS_PER_YEAR / 1000.0
+        else:
+            if energy_kwh_per_year < 0.0:
+                raise ValueError(f"energy_kwh_per_year must be >= 0, got "
+                                 f"{energy_kwh_per_year}")
+            energy_kwh = energy_kwh_per_year
         mean_ci = self.intensity.mean_g_per_kwh()
         operational = energy_kwh * mean_ci / 1000.0
         cpu_embodied = self.lifetime(deg_ref, deg_technique).yearly_kgco2eq

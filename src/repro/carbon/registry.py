@@ -9,7 +9,7 @@
 Names are case-insensitive and underscore/hyphen-insensitive, matching
 the policy / scenario / router axes. Every `get_carbon_model` call
 returns a NEW instance. The mechanics live in the shared
-`repro.registry.Registry` (one implementation for all four axes).
+`repro.registry.Registry` (one implementation for all five axes).
 """
 from __future__ import annotations
 

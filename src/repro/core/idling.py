@@ -47,6 +47,38 @@ def core_correction(
     return int(n * reaction_function(e))
 
 
+def temporal_adjustment(
+    correction: int,
+    intensity_now: float,
+    intensity_mean: float,
+    oversub_tasks: int,
+    dirty_frac: float = 1.05,
+    defer_frac: float = 0.5,
+    guard_tasks: int = 2,
+    gate_gain: float = 2.0,
+) -> int:
+    """Carbon-aware temporal reshaping of Algorithm 2's correction.
+
+    During *dirty-grid* hours (`intensity_now > dirty_frac *
+    intensity_mean`) the controller leans harder into deep idling:
+    gating corrections are amplified (`gate_gain`), and wake-up
+    corrections are partially deferred (`defer_frac` of the requested
+    wakes held back) so cores stay power-gated — not aging, not burning
+    watts — until the grid is cleaner. The p99-latency guard: deferral
+    only applies while at most `guard_tasks` tasks are oversubscribed;
+    beyond that, latency is already at stake and every requested wake
+    goes through. Clean hours pass the correction through unchanged,
+    so the reaction function's steady-state behaviour is untouched.
+    """
+    if correction == 0 or intensity_now <= dirty_frac * intensity_mean:
+        return correction
+    if correction > 0:
+        return int(correction * gate_gain)
+    if oversub_tasks > guard_tasks:
+        return correction
+    return correction + int(-correction * defer_frac)
+
+
 def apply_correction(
     correction: int,
     active_mask: np.ndarray,

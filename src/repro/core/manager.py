@@ -23,6 +23,7 @@ import numpy as np
 from repro.core import aging, mapping, temperature, variation
 from repro.core.policies import CorePolicy, CoreView, get_policy
 from repro.core.temperature import CState
+from repro.power.residency import ResidencyAccumulator, StateResidency
 
 OVERSUBSCRIBED = -1  # sentinel core id for tasks that didn't get a core
 
@@ -53,6 +54,7 @@ class CoreManager:
         idling_period_s: float = 1.0,
         policy_opts: dict | None = None,
         on_promote=None,
+        res_window_s: float = 1.0,
     ):
         self.num_cores = num_cores
         # Called as on_promote(task_id, core, now, speed) whenever a task
@@ -126,6 +128,14 @@ class CoreManager:
         self._inv_n = 1.0 / p.n
         self._n_exp = p.n
         self._headroom = p.headroom
+        # C-state residency integrals for the power models. Pure additive
+        # bookkeeping driven off the busy set + gated count: it never reads
+        # or reorders the aging math, so the settle paths stay bit-exact.
+        self.residency_acc = ResidencyAccumulator(n, window_s=res_window_s)
+        self._n_gated = 0
+        # task -> settled frequency factor it runs at (assign/promote
+        # time); consumed on release for frequency-weighted busy time.
+        self._task_speed: dict[int, float] = {}
 
     @staticmethod
     def _resolve_policy(policy, policy_opts) -> CorePolicy:
@@ -224,6 +234,10 @@ class CoreManager:
         idle_dur = now - self.idle_since.item(core)
         self._record_idle_end(core, idle_dur if idle_dur > 0.0 else 0.0)
         self._settle(core, now)          # settle idle regime
+        # Bank the interval's residency under the old counts before the
+        # busy set grows (same settle-before-change rule as the aging).
+        self.residency_acc.advance(now, len(self._busy_cores),
+                                   self._n_gated)
         self.task_of_core[core] = task_id
         self.core_of_task[task_id] = core
         self.task_start[task_id] = now
@@ -269,6 +283,8 @@ class CoreManager:
     def settle_all(self, now: float) -> None:
         """Vectorized settlement of every core (used by the periodic path
         and by metric snapshots; mirrors the Pallas aging_update kernel)."""
+        self.residency_acc.advance(now, len(self._busy_cores),
+                                   self._n_gated)
         if not (now - self.last_update > 0).any():
             self.now = max(self.now, now)
             return
@@ -308,8 +324,10 @@ class CoreManager:
         # End the core's idle period -> record idle duration (Alg. 1 input).
         self._mark_busy(core, task_id, now)
         # aging.frequency_scalar inlined (Eq. 1) on plain floats.
-        return self.f0.item(core) * (1.0 - self.dvth.item(core)
-                                     / self._headroom)
+        speed = self.f0.item(core) * (1.0 - self.dvth.item(core)
+                                      / self._headroom)
+        self._task_speed[task_id] = speed
+        return speed
 
     def release(self, task_id: int, now: float) -> None:
         if now > self.now:
@@ -320,12 +338,18 @@ class CoreManager:
             return
         if core == OVERSUBSCRIBED:
             self.oversub_tasks.discard(task_id)
+            self._task_speed.pop(task_id, None)
             self._account_oversub(task_id, now)
             if self.oversub_tasks:
                 self._promote_oversubscribed(now)
             return
         self._settle(core, now)          # settle allocated regime
         self.cum_work[core] += now - start
+        speed = self._task_speed.pop(task_id, None)
+        if speed is not None:
+            self.residency_acc.add_busy_frequency(speed, now - start)
+        self.residency_acc.advance(now, len(self._busy_cores),
+                                   self._n_gated)
         self.task_of_core[core] = -1
         self._busy_cores.discard(core)
         self.idle_since[core] = now
@@ -360,9 +384,10 @@ class CoreManager:
             self.oversub_tasks.discard(task_id)
             self._account_oversub(task_id, now)
             self._mark_busy(core, task_id, now)
+            speed = aging.frequency_scalar(
+                self.params, float(self.f0[core]), float(self.dvth[core]))
+            self._task_speed[task_id] = speed
             if self.on_promote is not None:
-                speed = aging.frequency_scalar(
-                    self.params, float(self.f0[core]), float(self.dvth[core]))
                 self.on_promote(task_id, core, now, speed)
 
     # ------------------------------------------------------------------ #
@@ -411,6 +436,11 @@ class CoreManager:
             self.c_state[i] = CState.ACTIVE
             self.idle_since[i] = now
             self._push_free(i)
+        # settle_all already advanced the residency clock to `now`, so the
+        # gated-count change takes effect from this instant. Recount from
+        # c_state (not a +/- delta) so nonstandard corrections can't drift
+        # the residency books.
+        self._n_gated = int((self.c_state == CState.DEEP_IDLE).sum())
         if len(corr.to_wake):
             self._promote_oversubscribed(now)
 
@@ -434,6 +464,14 @@ class CoreManager:
     def mean_frequency_degradation(self, now: float | None = None) -> float:
         f = self.frequencies(now)
         return float(np.mean(self.f0 - f))
+
+    def residency(self, now: float | None = None) -> StateResidency:
+        """Frozen core-state residency record up to `now` (default: the
+        manager's current time). Advances only the residency clock —
+        the aging state is untouched."""
+        t = self.now if now is None else now
+        self.residency_acc.advance(t, len(self._busy_cores), self._n_gated)
+        return self.residency_acc.snapshot()
 
     def snapshot(self) -> dict:
         f = self._frequencies_now(settle=False)

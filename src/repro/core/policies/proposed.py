@@ -15,7 +15,42 @@ class ProposedPolicy(CorePolicy):
     estimate), and a per-period reaction function sizes the working set
     to throughput, power-gating spare cores most-aged-first so their
     NBTI aging halts.
+
+    `carbon_aware=True` adds the temporal dimension: during dirty-grid
+    hours (current `CarbonIntensity` above `dirty_frac` x its mean) the
+    periodic correction is reshaped by `idling.temporal_adjustment` —
+    gating amplified by `gate_gain`, wake-ups partially deferred by
+    `defer_frac` while at most `guard_tasks` tasks are oversubscribed
+    (the p99-latency guard). The default (`carbon_aware=False`) is
+    bit-exact with the pre-option behaviour.
     """
+
+    def __init__(self, carbon_aware: bool = False,
+                 intensity="diurnal", intensity_opts=None,
+                 dirty_frac: float = 1.05, defer_frac: float = 0.5,
+                 guard_tasks: int = 2, gate_gain: float = 2.0):
+        if not 0.0 <= defer_frac <= 1.0:
+            raise ValueError(f"defer_frac must be in [0, 1], got "
+                             f"{defer_frac}")
+        if gate_gain < 1.0:
+            raise ValueError(f"gate_gain must be >= 1, got {gate_gain}")
+        if guard_tasks < 0:
+            raise ValueError(f"guard_tasks must be >= 0, got "
+                             f"{guard_tasks}")
+        if dirty_frac <= 0.0:
+            raise ValueError(f"dirty_frac must be > 0, got {dirty_frac}")
+        self.carbon_aware = bool(carbon_aware)
+        self.dirty_frac = dirty_frac
+        self.defer_frac = defer_frac
+        self.guard_tasks = guard_tasks
+        self.gate_gain = gate_gain
+        self._intensity = None
+        self._intensity_mean = 0.0
+        if self.carbon_aware:
+            from repro.carbon.intensity import get_intensity
+            self._intensity = get_intensity(
+                intensity, **dict(intensity_opts or {}))
+            self._intensity_mean = self._intensity.mean_g_per_kwh()
 
     def select_core(self, view: CoreView) -> int:
         # Algorithm 1's masked argmax, answered by the manager's
@@ -33,6 +68,12 @@ class ProposedPolicy(CorePolicy):
             int(assigned_mask.sum()),
             view.oversub_count,
         )
+        if self._intensity is not None:
+            corr = idling.temporal_adjustment(
+                corr, self._intensity.g_per_kwh(view.now),
+                self._intensity_mean, view.oversub_count,
+                dirty_frac=self.dirty_frac, defer_frac=self.defer_frac,
+                guard_tasks=self.guard_tasks, gate_gain=self.gate_gain)
         to_idle, to_wake = idling.apply_correction(
             corr, active_mask, assigned_mask, view.dvth)
         if not (len(to_idle) or len(to_wake)):

@@ -1,4 +1,4 @@
-"""Generic string-keyed registry shared by the three pluggable axes.
+"""Generic string-keyed registry shared by the five pluggable axes.
 
 `repro.core.policies`, `repro.workloads` and `repro.sim.routing`
 deliberately mirror each other: canonical-name normalization, a

@@ -68,6 +68,7 @@ class Machine:
             rng=np.random.default_rng(cfg.seed * 1000 + machine_id),
             idling_period_s=cfg.idling_period_s,
             on_promote=self._on_promote,
+            res_window_s=cfg.resolved_power_window_s,
         )
         self.running_cpu_tasks = 0
         self.task_count_samples: list[int] = []

@@ -26,6 +26,7 @@ from typing import Any, Mapping
 
 from repro.carbon.registry import canonical_carbon_model_name
 from repro.core.policies import canonical_policy_name
+from repro.power.registry import canonical_power_model_name
 from repro.sim.routing import canonical_router_name
 from repro.workloads import canonical_scenario_name
 
@@ -51,6 +52,11 @@ class ExperimentConfig:
     # `repro.carbon` — prices per-machine embodied carbon in the result)
     carbon_model: str = "linear-extension"
     carbon_opts: tuple[tuple[str, Any], ...] = ()
+    # machine power accounting (model registry name + constructor options;
+    # see `repro.power` — prices measured per-core state residencies into
+    # energy and operational carbon in the result)
+    power_model: str = "flat-tdp"
+    power_opts: tuple[tuple[str, Any], ...] = ()
     # workload (scenario registry name + factory options; the scenario
     # receives rate_rps / duration_s / seed at generation time)
     scenario: str = "conversation-poisson"
@@ -60,6 +66,9 @@ class ExperimentConfig:
     # bookkeeping
     seed: int = 0
     sample_period_s: float = 0.1
+    # residency-window width for temporal power x intensity integration;
+    # 0.0 = auto (`max(idling_period_s, duration_s / 1024)`)
+    power_window_s: float = 0.0
 
     def __post_init__(self):
         # Normalize: accept any hyphen/underscore spelling for registry
@@ -74,8 +83,10 @@ class ExperimentConfig:
                            canonical_router_name(self.router))
         object.__setattr__(self, "carbon_model",
                            canonical_carbon_model_name(self.carbon_model))
+        object.__setattr__(self, "power_model",
+                           canonical_power_model_name(self.power_model))
         for field in ("policy_opts", "scenario_opts", "router_opts",
-                      "carbon_opts"):
+                      "carbon_opts", "power_opts"):
             opts = getattr(self, field)
             if isinstance(opts, Mapping):
                 opts = opts.items()
@@ -85,6 +96,9 @@ class ExperimentConfig:
         if self.n_prompt < 1 or self.n_token < 1:
             raise ValueError("need at least one prompt and one token "
                              f"instance, got {self.n_prompt}/{self.n_token}")
+        if self.power_window_s < 0.0:
+            raise ValueError(f"power_window_s must be >= 0, got "
+                             f"{self.power_window_s}")
 
     @property
     def n_machines(self) -> int:
@@ -109,6 +123,18 @@ class ExperimentConfig:
     def carbon_options(self) -> dict[str, Any]:
         """`carbon_opts` as a plain kwargs dict."""
         return dict(self.carbon_opts)
+
+    @property
+    def power_options(self) -> dict[str, Any]:
+        """`power_opts` as a plain kwargs dict."""
+        return dict(self.power_opts)
+
+    @property
+    def resolved_power_window_s(self) -> float:
+        """Residency-window width with the auto default applied."""
+        if self.power_window_s > 0.0:
+            return self.power_window_s
+        return max(self.idling_period_s, self.duration_s / 1024.0)
 
     def fingerprint(self) -> str:
         """Stable short hash of every field — the provenance key that
@@ -150,3 +176,11 @@ class ExperimentConfig:
         return dataclasses.replace(self, carbon_model=carbon_model,
                                    carbon_opts=tuple(sorted(
                                        carbon_opts.items())))
+
+    def with_power_model(self, power_model: str,
+                         **power_opts) -> "ExperimentConfig":
+        """Same experiment, different power accounting (opts reset
+        unless given)."""
+        return dataclasses.replace(self, power_model=power_model,
+                                   power_opts=tuple(sorted(
+                                       power_opts.items())))

@@ -11,11 +11,16 @@ import numpy as np
 
 from repro.carbon import get_carbon_model, reference_degradation
 from repro.carbon.base import CarbonModel, LifetimeEstimate
+from repro.carbon.intensity import ConstantIntensity
+from repro.carbon.models import HOURS_PER_YEAR
+from repro.power import get_power_model
+from repro.power.base import PowerModel
 from repro.sim.cluster import Cluster
 from repro.sim.config import ExperimentConfig
 from repro.sim.results import ExperimentResult, Provenance
 
 PERCENTILES = (1, 25, 50, 75, 90, 99)
+_SECONDS_PER_YEAR = HOURS_PER_YEAR * 3600.0
 
 
 def _role_weighted_cv(degs: np.ndarray, n_prompt: int) -> float:
@@ -33,15 +38,17 @@ def _role_weighted_cv(degs: np.ndarray, n_prompt: int) -> float:
 
 
 def collect(cluster: Cluster, cfg: ExperimentConfig,
-            carbon_model: CarbonModel | None = None) -> ExperimentResult:
+            carbon_model: CarbonModel | None = None,
+            power_model: PowerModel | None = None) -> ExperimentResult:
     """Aggregate a finished cluster run into an `ExperimentResult`.
 
     The config supplies the experiment identity (policy / scenario /
-    router / carbon model + opts) and the provenance fingerprint; the
-    pre-PR-5 `collect(cluster, policy, num_cores, rate_rps, ...)`
-    keyword pile is gone. `carbon_model` lets a caller that already
-    resolved `cfg.carbon_model` (e.g. `run_experiment`'s fail-fast
-    check) pass it in instead of constructing it twice.
+    router / carbon model / power model + opts) and the provenance
+    fingerprint; the pre-PR-5 `collect(cluster, policy, num_cores,
+    rate_rps, ...)` keyword pile is gone. `carbon_model` /
+    `power_model` let a caller that already resolved `cfg.carbon_model`
+    / `cfg.power_model` (e.g. `run_experiment`'s fail-fast check) pass
+    them in instead of constructing them twice.
     """
     cvs, degs, idle_all = [], [], []
     task_samples = []
@@ -76,6 +83,29 @@ def collect(cluster: Cluster, cfg: ExperimentConfig,
         get_carbon_model(cfg.carbon_model, **cfg.carbon_options)
     per_machine_carbon = tuple(model.lifetime(deg_ref, max(float(d), 0.0))
                                for d in degs)
+    fleet_yearly = float(sum(e.yearly_kgco2eq for e in per_machine_carbon))
+
+    # Operational side: price each machine's measured C-state residency
+    # through the configured power model, and its energy through the
+    # carbon model's grid intensity (flat world-average when the model
+    # carries none) — window by window, so time-of-day carbon variation
+    # genuinely reaches the headline numbers.
+    power = power_model if power_model is not None else \
+        get_power_model(cfg.power_model, **cfg.power_options)
+    residencies = tuple(m.manager.residency() for m in cluster.machines)
+    energies = tuple(power.energy_kwh(r) for r in residencies)
+    fleet_energy = float(sum(energies))
+    intensity = getattr(model, "intensity", None)
+    if intensity is None:
+        intensity = ConstantIntensity()
+    op_kg = float(sum(power.operational_g(r, intensity)
+                      for r in residencies)) / 1000.0
+    if elapsed > 0:
+        yearly_op = op_kg * (_SECONDS_PER_YEAR / elapsed)
+        mean_power_w = (fleet_energy * 3.6e6
+                        / (elapsed * len(cluster.machines)))
+    else:
+        yearly_op = mean_power_w = float("nan")
 
     def pct(x):
         return {p: float(np.percentile(x, p)) for p in PERCENTILES}
@@ -99,9 +129,17 @@ def collect(cluster: Cluster, cfg: ExperimentConfig,
         carbon_opts=cfg.carbon_opts,
         fleet_degradation_cv=fleet_cv,
         per_machine_carbon=per_machine_carbon,
-        fleet_yearly_kgco2eq=float(sum(e.yearly_kgco2eq
-                                       for e in per_machine_carbon)),
+        fleet_yearly_kgco2eq=fleet_yearly,
         deg_reference=float(deg_ref),
+        power_model=cfg.power_model,
+        power_opts=cfg.power_opts,
+        per_machine_energy_kwh=energies,
+        per_machine_residency=residencies,
+        fleet_energy_kwh=fleet_energy,
+        mean_machine_power_w=mean_power_w,
+        fleet_operational_kgco2eq=op_kg,
+        fleet_yearly_operational_kgco2eq=yearly_op,
+        fleet_yearly_total_kgco2eq=fleet_yearly + yearly_op,
         per_machine_cv=tuple(float(x) for x in cvs),
         per_machine_degradation=tuple(float(x) for x in degs),
         per_machine_idle_norm=tuple(

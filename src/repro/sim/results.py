@@ -27,6 +27,7 @@ from collections.abc import Mapping
 from typing import Any, Iterator
 
 from repro.carbon.base import LifetimeEstimate
+from repro.power.residency import StateResidency
 
 #: bumped when the serialized layout changes incompatibly
 RESULT_SCHEMA_VERSION = 1
@@ -141,6 +142,23 @@ class ExperimentResult:
     per_machine_degradation: tuple[float, ...] | None = None
     per_machine_idle_norm: tuple[tuple[float, ...], ...] | None = None
     per_machine_task_samples: tuple[tuple[int, ...], ...] | None = None
+    # power-accounting axis (see `repro.power`): the model (and opts)
+    # that priced the measured per-core state residencies into energy /
+    # operational carbon. `per_machine_residency` keeps the raw
+    # residencies so the fleet can be re-priced under another power
+    # model without re-simulating (`fleet_energy_under`).
+    power_model: str = "flat-tdp"
+    power_opts: tuple[tuple[str, Any], ...] = ()
+    per_machine_energy_kwh: tuple[float, ...] | None = None
+    per_machine_residency: tuple[StateResidency, ...] | None = None
+    fleet_energy_kwh: float = float("nan")      # over the sim horizon
+    mean_machine_power_w: float = float("nan")
+    # operational carbon from measured energy x the carbon model's grid
+    # intensity, over the sim horizon and annualized; `..._total` adds
+    # the embodied yearly figure for the full-footprint headline
+    fleet_operational_kgco2eq: float = float("nan")
+    fleet_yearly_operational_kgco2eq: float = float("nan")
+    fleet_yearly_total_kgco2eq: float = float("nan")
     provenance: Provenance | None = None
 
     # ------------------------------------------------------------------ #
@@ -162,13 +180,20 @@ class ExperimentResult:
             d[f] = {int(p): float(v) for p, v in d[f].items()}
         d["carbon_opts"] = tuple((str(k), _tuplify(v))
                                  for k, v in d.get("carbon_opts", ()))
+        d["power_opts"] = tuple((str(k), _tuplify(v))
+                                for k, v in d.get("power_opts", ()))
         if d.get("per_machine_carbon") is not None:
             d["per_machine_carbon"] = tuple(
                 LifetimeEstimate.from_dict(e)
                 for e in d["per_machine_carbon"])
-        for f in ("per_machine_cv", "per_machine_degradation"):
+        for f in ("per_machine_cv", "per_machine_degradation",
+                  "per_machine_energy_kwh"):
             if d.get(f) is not None:
                 d[f] = tuple(float(x) for x in d[f])
+        if d.get("per_machine_residency") is not None:
+            d["per_machine_residency"] = tuple(
+                StateResidency.from_dict(r)
+                for r in d["per_machine_residency"])
         if d.get("per_machine_idle_norm") is not None:
             d["per_machine_idle_norm"] = tuple(
                 tuple(float(x) for x in row)
@@ -191,10 +216,14 @@ class ExperimentResult:
     # ------------------------------------------------------------------ #
     # tabulation
     # ------------------------------------------------------------------ #
-    _SCALARS = ("policy", "scenario", "router", "carbon_model", "num_cores",
+    _SCALARS = ("policy", "scenario", "router", "carbon_model",
+                "power_model", "num_cores",
                 "rate_rps", "completed", "task_count_mean", "task_count_max",
                 "oversub_frac_below", "mean_latency_s", "p99_latency_s",
-                "fleet_degradation_cv", "fleet_yearly_kgco2eq")
+                "fleet_degradation_cv", "fleet_yearly_kgco2eq",
+                "fleet_energy_kwh", "mean_machine_power_w",
+                "fleet_yearly_operational_kgco2eq",
+                "fleet_yearly_total_kgco2eq")
     _PCT_SHORT = (("freq_cv_percentiles", "freq_cv"),
                   ("mean_degradation_percentiles", "mean_degradation"),
                   ("idle_norm_percentiles", "idle_norm"))
@@ -233,6 +262,26 @@ class ExperimentResult:
         return float(sum(
             model.lifetime(self.deg_reference, max(d, 0.0)).yearly_kgco2eq
             for d in self.per_machine_degradation))
+
+    def fleet_energy_under(self, model=None) -> float:
+        """Re-price the fleet's horizon energy (kWh) under another power
+        model. The saved per-machine residencies are power-model-
+        independent, so repricing is exact: `model=None` rebuilds the
+        result's own model *and opts*, reproducing `fleet_energy_kwh`
+        bit for bit; a registry name is built with default opts; pass a
+        `PowerModel` instance for full control."""
+        from repro.power import get_power_model
+        from repro.power.base import PowerModel
+        if model is None:
+            model = get_power_model(self.power_model,
+                                    **dict(self.power_opts))
+        elif not isinstance(model, PowerModel):
+            model = get_power_model(model)
+        if self.per_machine_residency is None:
+            raise ValueError("result lacks per-machine residency detail "
+                             "(per_machine_residency)")
+        return float(sum(model.energy_kwh(r)
+                         for r in self.per_machine_residency))
 
     def same_experiment(self, other: "ExperimentResult") -> bool:
         """True when both results carry provenance for the *same*

@@ -29,6 +29,11 @@ Built-ins:
                    in time, so the marginal carbon of one more task is
                    smallest on the *most* aged machine — old servers
                    soak up load while fresh ones amortize slowly.
+  footprint-greedy — carbon-greedy plus the task's *operational* grams
+                   under a `repro.power` model and a time-varying grid
+                   intensity: full-footprint marginal scoring that
+                   re-weights the embodied/operational trade hour by
+                   hour.
 
 Routers are per-cluster objects (they may carry cursors or RNG-driven
 state) and must route through the `FleetView` only — they never see the
@@ -42,8 +47,11 @@ from typing import ClassVar
 import numpy as np
 
 from repro.carbon import get_carbon_model, reference_degradation
-from repro.carbon.base import CarbonModel
+from repro.carbon.base import BASELINE_LIFESPAN_YEARS, CarbonModel
+from repro.carbon.intensity import ConstantIntensity, get_intensity
 from repro.core import aging, temperature
+from repro.power import get_power_model
+from repro.power.base import PowerModel
 from repro.registry import Registry, canonical_name
 
 
@@ -99,6 +107,11 @@ class FleetView:
     @property
     def aging_params(self) -> aging.AgingParams:
         return self._c.machines[0].manager.params
+
+    @property
+    def num_cores(self) -> int:
+        """Host-CPU core count per machine (homogeneous fleet)."""
+        return self._c.machines[0].manager.num_cores
 
     # -- load ---------------------------------------------------------- #
     def prompt_depths(self) -> np.ndarray:
@@ -337,7 +350,7 @@ class CarbonGreedyRouter(ClusterRouter):
             self.carbon_model = carbon_model
         else:
             self.carbon_model = get_carbon_model(carbon_model,
-                                                 **(carbon_opts or {}))
+                                                 **dict(carbon_opts or {}))
 
     def _select(self, fleet: FleetView, loads, snapshot) -> int:
         cand = _feasible(loads, self.slack)
@@ -371,3 +384,90 @@ class CarbonGreedyRouter(ClusterRouter):
 
     def select_token(self, fleet: FleetView) -> int:
         return self._select(fleet, fleet.token_loads(), fleet.token_aging)
+
+
+@register_router("footprint-greedy")
+class FootprintGreedyRouter(CarbonGreedyRouter):
+    """Minimize the task's full footprint: embodied AND operational.
+
+    Extends `carbon-greedy`'s marginal scoring with the task's
+    operational grams under a `repro.power` model and a time-varying
+    grid intensity:
+
+      embodied_g    = delta yearly embodied [kg/yr] * 1000
+                        * embodied_horizon_years
+      operational_g = marginal_task_w(f_i) * (tau_s / f_i) / 3.6e6
+                        * intensity(now)
+
+    where `f_i` is the candidate machine's settled mean frequency. The
+    two terms genuinely pull apart: NBTI concavity makes embodied
+    cheapest on the *most*-aged machine, while an `ondemand`-governor
+    power model makes a task's energy `tau * (min_w / f + (max_w -
+    min_w))` — *highest* there (slower core, longer on-time). The
+    intensity term re-weights that trade hour by hour, so placement
+    leans operational during dirty-grid hours and embodied during clean
+    ones. Under `flat-tdp` the marginal watts are zero and the router
+    degenerates to `carbon-greedy`.
+
+    `intensity=None` (default) borrows the carbon model's own
+    `.intensity` when it has one (e.g. `operational-embodied`), so one
+    diurnal spec can drive pricing, policy, and routing coherently.
+    """
+
+    def __init__(self, slack: int = 2, tau_s: float = 0.01,
+                 carbon_model="linear-extension", carbon_opts=None,
+                 power_model="minmax-linear", power_opts=None,
+                 intensity=None, intensity_opts=None,
+                 embodied_horizon_years: float = BASELINE_LIFESPAN_YEARS):
+        super().__init__(slack=slack, tau_s=tau_s,
+                         carbon_model=carbon_model,
+                         carbon_opts=carbon_opts)
+        if embodied_horizon_years <= 0.0:
+            raise ValueError(f"embodied_horizon_years must be > 0, got "
+                             f"{embodied_horizon_years}")
+        if isinstance(power_model, PowerModel):
+            if power_opts:
+                raise TypeError("power_opts only apply when power_model "
+                                "is a registry name, got an instance")
+            self.power_model = power_model
+        else:
+            self.power_model = get_power_model(power_model,
+                                               **dict(power_opts or {}))
+        if intensity is not None:
+            self.intensity = get_intensity(intensity,
+                                           **dict(intensity_opts or {}))
+        else:
+            self.intensity = getattr(self.carbon_model, "intensity", None)
+            if self.intensity is None:
+                self.intensity = ConstantIntensity()
+        self.embodied_horizon_years = embodied_horizon_years
+
+    def _select(self, fleet: FleetView, loads, snapshot) -> int:
+        cand = _feasible(loads, self.slack)
+        if len(cand) == 1:
+            return int(cand[0])
+        params = fleet.aging_params
+        deg_ref = reference_degradation(params, fleet.now)
+        adf_active = params.K * aging.adf_unscaled_cached(
+            params, temperature.TEMP_ACTIVE_ALLOCATED_C,
+            temperature.STRESS_ACTIVE)
+        lifetime = self.carbon_model.lifetime
+        i_now = self.intensity.g_per_kwh(fleet.now)
+        n_cores = fleet.num_cores
+        best, best_score = int(cand[0]), np.inf
+        for i, s in zip(cand, snapshot(cand)):
+            dvth_next = aging.advance_dvth_scalar(
+                params, s.mean_dvth, adf_active, self.tau_s)
+            deg_next = s.mean_degradation \
+                + s.mean_f0 * (dvth_next - s.mean_dvth) / params.headroom
+            emb_g = (lifetime(deg_ref, max(deg_next, 0.0)).yearly_kgco2eq
+                     - lifetime(deg_ref, max(s.mean_degradation, 0.0))
+                     .yearly_kgco2eq) \
+                * 1000.0 * self.embodied_horizon_years
+            f = max(s.mean_f0 - s.mean_degradation, 1e-6)
+            op_g = (self.power_model.marginal_task_w(f, n_cores)
+                    * (self.tau_s / f) / 3.6e6 * i_now)
+            score = emb_g + op_g
+            if score < best_score:
+                best, best_score = int(i), score
+        return best

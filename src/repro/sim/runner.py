@@ -32,6 +32,8 @@ from __future__ import annotations
 
 from repro.carbon import get_carbon_model
 from repro.core.policies import canonical_policy_name
+from repro.power import get_power_model
+from repro.power.registry import canonical_power_model_name
 from repro.sim import metrics as metrics_mod
 from repro.sim.cluster import Cluster
 from repro.sim.config import ExperimentConfig
@@ -53,12 +55,14 @@ def run_experiment(cfg: ExperimentConfig) -> ExperimentResult:
     # Cluster.__init__ below); the resolved carbon model is handed to
     # `collect`, which would otherwise construct it a second time.
     carbon_model = get_carbon_model(cfg.carbon_model, **cfg.carbon_options)
+    power_model = get_power_model(cfg.power_model, **cfg.power_options)
     scenario = get_scenario(cfg.scenario, **cfg.scenario_options)
     trace = scenario.generate(rate_rps=cfg.rate_rps,
                               duration_s=cfg.duration_s, seed=cfg.seed)
     cluster = Cluster(cfg)
     cluster.run(trace, cfg.duration_s, sample_period_s=cfg.sample_period_s)
-    return metrics_mod.collect(cluster, cfg, carbon_model=carbon_model)
+    return metrics_mod.collect(cluster, cfg, carbon_model=carbon_model,
+                               power_model=power_model)
 
 
 def run_policy_sweep(
@@ -66,18 +70,22 @@ def run_policy_sweep(
     policies=DEFAULT_SWEEP,
     scenarios=None,
     routers=None,
+    power_models=None,
     parallel: int | None = None,
 ) -> SweepResult:
-    """Run the same experiment across policies (x scenarios x routers).
+    """Run the same experiment across policies (x scenarios x routers
+    x power models).
 
-    Policies/scenarios/routers are given by registry name. With
-    `scenarios=None` and `routers=None` (default) the result is keyed by
-    policy name, preserving the single-axis API. Adding `scenarios=`
-    keys by `(policy, scenario)`; adding `routers=` keys by `(policy,
-    router)`; both together key by `(policy, scenario, router)`.
-    `cfg.policy_opts` / `cfg.scenario_opts` / `cfg.router_opts` only
+    Policies/scenarios/routers/power models are given by registry name.
+    With `scenarios=None`, `routers=None` and `power_models=None`
+    (default) the result is keyed by policy name, preserving the
+    single-axis API. Adding `scenarios=` keys by `(policy, scenario)`;
+    adding `routers=` keys by `(policy, router)`; adding
+    `power_models=` appends a power-model part; all together key by
+    `(policy, scenario, router, power_model)`. `cfg.policy_opts` /
+    `cfg.scenario_opts` / `cfg.router_opts` / `cfg.power_opts` only
     apply to the sweep entries matching `cfg.policy` / `cfg.scenario` /
-    `cfg.router`.
+    `cfg.router` / `cfg.power_model`.
 
     `parallel=N` fans the grid's cells across a process pool of N
     workers. Every cell is an independent simulation whose seeding is
@@ -96,9 +104,11 @@ def run_policy_sweep(
         cfg = ExperimentConfig()
     scenario_axis = scenarios is not None
     router_axis = routers is not None
+    power_axis = power_models is not None
     axes = (("policy",)
             + (("scenario",) if scenario_axis else ())
-            + (("router",) if router_axis else ()))
+            + (("router",) if router_axis else ())
+            + (("power_model",) if power_axis else ()))
     cells: list[tuple[object, ExperimentConfig]] = []
     for s in (scenarios if scenario_axis else (cfg.scenario,)):
         s_name = canonical_scenario_name(s)
@@ -107,12 +117,18 @@ def run_policy_sweep(
             r_name = canonical_router_name(r)
             r_cfg = s_cfg if r_name == s_cfg.router \
                 else s_cfg.with_router(r_name)
-            for p in policies:
-                run_cfg = _with_policy(r_cfg, p)
-                key = ((run_cfg.policy,)
-                       + ((s_name,) if scenario_axis else ())
-                       + ((r_name,) if router_axis else ()))
-                cells.append((key if len(key) > 1 else key[0], run_cfg))
+            for w in (power_models if power_axis else (cfg.power_model,)):
+                w_name = canonical_power_model_name(w)
+                w_cfg = r_cfg if w_name == r_cfg.power_model \
+                    else r_cfg.with_power_model(w_name)
+                for p in policies:
+                    run_cfg = _with_policy(w_cfg, p)
+                    key = ((run_cfg.policy,)
+                           + ((s_name,) if scenario_axis else ())
+                           + ((r_name,) if router_axis else ())
+                           + ((w_name,) if power_axis else ()))
+                    cells.append((key if len(key) > 1 else key[0],
+                                  run_cfg))
     if parallel is not None and int(parallel) > 1 and len(cells) > 1:
         import concurrent.futures
 

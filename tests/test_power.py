@@ -1,0 +1,482 @@
+"""Power subsystem tests: residency accounting, built-in models, the
+fifth config axis, energy/operational wiring, and temporal consumers."""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.carbon.intensity import ConstantIntensity, DiurnalIntensity
+from repro.core import CoreManager, idling
+from repro.core.temperature import CState
+from repro.power import (NODE_COEFFS, FittedLinearModel, FlatTdpModel,
+                         MinMaxLinearModel, PowerModel, ResidencyAccumulator,
+                         StateResidency, TdpPerCoreModel,
+                         available_power_models, canonical_power_model_name,
+                         get_power_model)
+from repro.sim import ExperimentConfig, run_experiment, run_policy_sweep
+
+#: the historical implicit assumption: (2800 + 800) W at 0.6 utilization
+FLAT_WATTS = 2160.0
+
+
+def residency(num_cores=4, duration_s=10.0, busy=10.0, idle=20.0,
+              gated=10.0, freq=None, window_s=10.0, windows=None):
+    """Hand-rolled StateResidency; one full window by default."""
+    if windows is None:
+        windows = ((busy,), (idle,), (gated,))
+    return StateResidency(
+        num_cores=num_cores, duration_s=duration_s, busy_core_s=busy,
+        idle_core_s=idle, gated_core_s=gated,
+        freq_busy_core_s=busy if freq is None else freq,
+        window_s=window_s, window_busy_s=windows[0],
+        window_idle_s=windows[1], window_gated_s=windows[2])
+
+
+class TestResidencyAccumulator:
+    def test_conservation(self):
+        acc = ResidencyAccumulator(8, window_s=1.0)
+        acc.advance(0.7, 3, 2)
+        acc.advance(2.4, 5, 0)
+        acc.advance(7.13, 0, 8)
+        r = acc.snapshot()
+        total = r.busy_core_s + r.idle_core_s + r.gated_core_s
+        assert total == pytest.approx(8 * 7.13, rel=1e-12)
+        assert r.duration_s == 7.13
+        # windows bank the same core-seconds as the scalar integrals
+        assert sum(r.window_busy_s) == pytest.approx(r.busy_core_s, rel=1e-12)
+        assert sum(r.window_idle_s) == pytest.approx(r.idle_core_s, rel=1e-12)
+        assert sum(r.window_gated_s) == pytest.approx(r.gated_core_s,
+                                                     rel=1e-12)
+
+    def test_window_split_across_boundaries(self):
+        acc = ResidencyAccumulator(2, window_s=1.0)
+        acc.advance(2.5, 1, 0)          # spans windows 0, 1 and half of 2
+        r = acc.snapshot()
+        assert r.window_busy_s == (1.0, 1.0, 0.5)
+        assert r.window_idle_s == (1.0, 1.0, 0.5)
+        assert r.window_gated_s == (0.0, 0.0, 0.0)
+
+    def test_same_window_fast_path(self):
+        acc = ResidencyAccumulator(4, window_s=100.0)
+        acc.advance(3.0, 1, 0)
+        acc.advance(9.0, 2, 1)
+        r = acc.snapshot()
+        assert len(r.window_busy_s) == 1
+        assert r.window_busy_s[0] == pytest.approx(1 * 3.0 + 2 * 6.0)
+        assert r.window_gated_s[0] == pytest.approx(1 * 6.0)
+
+    def test_non_advancing_time_is_noop(self):
+        acc = ResidencyAccumulator(4)
+        acc.advance(5.0, 2, 0)
+        acc.advance(5.0, 4, 0)          # dt == 0
+        acc.advance(4.0, 4, 0)          # dt < 0
+        r = acc.snapshot()
+        assert r.busy_core_s == 10.0 and r.duration_s == 5.0
+
+    def test_bad_window_rejected(self):
+        with pytest.raises(ValueError, match="window_s must be > 0"):
+            ResidencyAccumulator(4, window_s=0.0)
+
+    def test_frequency_weighting(self):
+        acc = ResidencyAccumulator(2)
+        acc.advance(10.0, 1, 0)
+        acc.add_busy_frequency(0.9, 6.0)
+        acc.add_busy_frequency(0.8, 4.0)
+        r = acc.snapshot()
+        assert r.mean_busy_frequency == pytest.approx(
+            (0.9 * 6.0 + 0.8 * 4.0) / 10.0)
+
+    def test_mean_frequency_defaults_to_nominal(self):
+        assert residency(busy=0.0).mean_busy_frequency == 1.0
+
+    def test_snapshot_dict_roundtrip(self):
+        acc = ResidencyAccumulator(4, window_s=2.0)
+        acc.advance(3.3, 2, 1)
+        acc.add_busy_frequency(0.95, 3.3)
+        r = acc.snapshot()
+        assert StateResidency.from_dict(r.to_dict()) == r
+
+    def test_iter_windows_fracs(self):
+        acc = ResidencyAccumulator(4, window_s=1.0)
+        acc.advance(2.0, 3, 1)
+        rows = list(acc.snapshot().iter_windows())
+        assert [t for t, *_ in rows] == [0.0, 1.0]
+        for _, elapsed, bf, if_, gf in rows:
+            assert elapsed == pytest.approx(1.0)
+            assert bf + if_ + gf == pytest.approx(1.0)
+            assert (bf, gf) == (pytest.approx(0.75), pytest.approx(0.25))
+
+
+class TestManagerResidency:
+    def make(self, n=8, policy="proposed", seed=0):
+        return CoreManager(n, policy=policy,
+                           rng=np.random.default_rng(seed))
+
+    def test_lifecycle_residency(self):
+        m = self.make(n=4)
+        m.assign(0, 0.0)
+        m.release(0, 3.0)
+        r = m.residency(10.0)
+        assert r.busy_core_s == pytest.approx(3.0)
+        assert r.idle_core_s == pytest.approx(4 * 10.0 - 3.0)
+        assert r.gated_core_s == 0.0
+        # the released task banked its settled speed over its 3 s run
+        assert 0.0 < r.mean_busy_frequency <= 1.6
+
+    def test_gated_cores_counted(self):
+        m = self.make(n=8)
+        m.periodic(1.0)                  # no tasks -> idles most cores
+        gated = int((m.c_state == CState.DEEP_IDLE).sum())
+        assert gated > 0
+        r = m.residency(11.0)
+        assert r.gated_core_s == pytest.approx(gated * 10.0)
+
+    def test_conservation_under_load(self):
+        for policy in ("proposed", "linux", "least-aged"):
+            m = self.make(n=8, policy=policy)
+            rng = np.random.default_rng(42)
+            t = 0.0
+            for task in range(50):
+                t += float(rng.exponential(0.3))
+                m.assign(task, t)
+                m.periodic(t)
+                m.release(task, t + float(rng.exponential(0.5)))
+            r = m.residency()
+            total = r.busy_core_s + r.idle_core_s + r.gated_core_s
+            assert total == pytest.approx(8 * r.duration_s, rel=1e-9)
+            assert min(r.busy_core_s, r.idle_core_s) >= 0.0
+
+
+class TestBuiltinModels:
+    def test_registry_contents(self):
+        assert available_power_models() == (
+            "fitted-linear", "flat-tdp", "minmax-linear", "tdp-per-core")
+        assert canonical_power_model_name("Flat_TDP") == "flat-tdp"
+        with pytest.raises(KeyError, match="unknown power model 'nope'"):
+            get_power_model("nope")
+
+    def test_flat_tdp_golden(self):
+        m = get_power_model("flat-tdp")
+        assert isinstance(m, FlatTdpModel)
+        # residency-blind: 2160 W whatever the core states say
+        for fracs in ((1, 0, 0), (0, 1, 0), (0, 0, 1), (0.2, 0.3, 0.5)):
+            assert m.machine_power_w(*fracs, 0.7, 40) == FLAT_WATTS
+        r = residency(duration_s=100.0)
+        assert m.energy_kwh(r) == FLAT_WATTS * 100.0 / 3.6e6
+        assert m.marginal_task_w(1.0, 40) == 0.0
+
+    def test_tdp_per_core_state_ordering(self):
+        m = TdpPerCoreModel()
+        busy = m.machine_power_w(1.0, 0.0, 0.0, 1.0, 40)
+        idle = m.machine_power_w(0.0, 1.0, 0.0, 1.0, 40)
+        gated = m.machine_power_w(0.0, 0.0, 1.0, 1.0, 40)
+        assert busy > idle > gated
+        assert gated == pytest.approx(250.0 + 1680.0)   # floors only
+        assert m.marginal_task_w(1.0, 40) > 0.0
+
+    def test_minmax_governors(self):
+        perf = MinMaxLinearModel(governor="performance")
+        save = MinMaxLinearModel(governor="powersave")
+        onde = MinMaxLinearModel(governor="ondemand")
+        args = (1.0, 0.0, 0.0, 1.0, 40)
+        assert perf.machine_power_w(*args) == onde.machine_power_w(*args)
+        assert save.machine_power_w(*args) < perf.machine_power_w(*args)
+        # ondemand: aged-slow cores draw less; factor clamps to [0, 1]
+        slow = onde.machine_power_w(1.0, 0.0, 0.0, 0.9, 40)
+        assert slow < onde.machine_power_w(*args)
+        assert (onde.machine_power_w(1.0, 0.0, 0.0, 1.7, 40)
+                == onde.machine_power_w(*args))
+
+    def test_minmax_validation(self):
+        with pytest.raises(ValueError, match="unknown governor"):
+            MinMaxLinearModel(governor="turbo")
+        with pytest.raises(ValueError, match="must be >= min_core_w"):
+            MinMaxLinearModel(min_core_w=10.0, max_core_w=5.0)
+        with pytest.raises(ValueError, match="min_core_w must be >= 0"):
+            MinMaxLinearModel(min_core_w=float("nan"))
+
+    def test_fitted_linear(self):
+        for node in NODE_COEFFS:
+            m = FittedLinearModel(node=node)
+            busy = m.machine_power_w(1.0, 0.0, 0.0, 1.0, 40)
+            gated = m.machine_power_w(0.0, 0.0, 1.0, 1.0, 40)
+            assert busy > gated > 0.0
+        # the frequency term: aged-slow busy cores draw less
+        m = FittedLinearModel()
+        assert (m.machine_power_w(1.0, 0.0, 0.0, 0.9, 40)
+                < m.machine_power_w(1.0, 0.0, 0.0, 1.0, 40))
+        with pytest.raises(ValueError, match="unknown node"):
+            FittedLinearModel(node="mystery-cpu")
+        with pytest.raises(ValueError, match="coeffs missing keys"):
+            FittedLinearModel(coeffs={"c0": 100.0})
+
+    def test_energy_integrates_windows(self):
+        m = TdpPerCoreModel()
+        # two 10 s windows: all-busy then all-gated
+        r = residency(num_cores=4, duration_s=20.0, busy=40.0, idle=0.0,
+                      gated=40.0, window_s=10.0,
+                      windows=((40.0, 0.0), (0.0, 0.0), (0.0, 40.0)))
+        expected = (m.machine_power_w(1, 0, 0, 1.0, 4) * 10.0
+                    + m.machine_power_w(0, 0, 1, 1.0, 4) * 10.0) / 3.6e6
+        assert m.energy_kwh(r) == pytest.approx(expected, rel=1e-12)
+
+    def test_operational_constant_matches_energy(self):
+        m = MinMaxLinearModel()
+        r = residency(num_cores=4, duration_s=20.0, busy=30.0, idle=40.0,
+                      gated=10.0, window_s=10.0,
+                      windows=((20.0, 10.0), (15.0, 25.0), (5.0, 5.0)))
+        g = m.operational_g(r, ConstantIntensity(400.0))
+        assert g == pytest.approx(m.energy_kwh(r) * 400.0, rel=1e-12)
+
+    def test_operational_prices_when_not_just_how_much(self):
+        """Identical energy costs more carbon when the busy window lands
+        on the dirty half of the cycle — the temporal coupling."""
+        m = TdpPerCoreModel()
+        sig = DiurnalIntensity(mean=400.0, amplitude=0.8, period_s=80.0)
+        busy_early = residency(
+            num_cores=4, duration_s=20.0, busy=40.0, idle=40.0, gated=0.0,
+            window_s=10.0, windows=((40.0, 0.0), (0.0, 40.0), (0.0, 0.0)))
+        busy_late = residency(
+            num_cores=4, duration_s=20.0, busy=40.0, idle=40.0, gated=0.0,
+            window_s=10.0, windows=((0.0, 40.0), (40.0, 0.0), (0.0, 0.0)))
+        # rising quarter-cycle: window midpoint 15 s is dirtier than 5 s
+        assert (m.operational_g(busy_late, sig)
+                > m.operational_g(busy_early, sig))
+        assert m.energy_kwh(busy_early) == pytest.approx(
+            m.energy_kwh(busy_late), rel=1e-12)
+
+
+class TestFifthConfigAxis:
+    def test_with_power_model(self):
+        cfg = ExperimentConfig()
+        assert cfg.power_model == "flat-tdp" and cfg.power_opts == ()
+        cfg2 = cfg.with_power_model("MinMax_Linear", governor="performance",
+                                    c6_core_w=0.2)
+        assert cfg2.power_model == "minmax-linear"
+        assert cfg2.power_opts == (("c6_core_w", 0.2),
+                                   ("governor", "performance"))
+        assert cfg2.power_options == {"c6_core_w": 0.2,
+                                      "governor": "performance"}
+        assert cfg.power_model == "flat-tdp"       # original untouched
+
+    def test_unknown_model_fails_fast_at_run(self):
+        # names canonicalize without validation (like every axis); the
+        # runner resolves the model before simulating, so a typo costs
+        # nothing
+        cfg = ExperimentConfig(power_model="voltage-psychic", **SHORT)
+        with pytest.raises(KeyError, match="unknown power model"):
+            run_experiment(cfg)
+
+    def test_power_window_resolution(self):
+        cfg = ExperimentConfig(duration_s=120.0, idling_period_s=1.0)
+        assert cfg.resolved_power_window_s == 1.0
+        cfg = ExperimentConfig(duration_s=4096.0, idling_period_s=1.0)
+        assert cfg.resolved_power_window_s == 4.0
+        assert ExperimentConfig(
+            power_window_s=7.5).resolved_power_window_s == 7.5
+        with pytest.raises(ValueError, match="power_window_s"):
+            ExperimentConfig(power_window_s=-1.0)
+
+    def test_dict_opts_frozen_sorted(self):
+        cfg = ExperimentConfig(power_opts={"utilization": 0.5,
+                                           "gpu_tdp_w": 2000.0})
+        assert cfg.power_opts == (("gpu_tdp_w", 2000.0),
+                                  ("utilization", 0.5))
+
+
+SHORT = dict(rate_rps=40.0, duration_s=15.0, seed=3)
+
+
+@pytest.fixture(scope="module")
+def flat_result():
+    return run_experiment(ExperimentConfig(**SHORT))
+
+
+class TestExperimentWiring:
+    def test_flat_tdp_energy_golden(self, flat_result):
+        r = flat_result
+        n = len(r.per_machine_energy_kwh)
+        expected = sum(FLAT_WATTS * res.duration_s / 3.6e6
+                       for res in r.per_machine_residency)
+        assert r.fleet_energy_kwh == pytest.approx(expected, rel=1e-12)
+        assert r.mean_machine_power_w == pytest.approx(FLAT_WATTS,
+                                                       rel=1e-12)
+        assert n == ExperimentConfig(**SHORT).n_machines
+        assert all(e > 0.0 for e in r.per_machine_energy_kwh)
+
+    def test_residency_invariants_per_machine(self, flat_result):
+        for res in flat_result.per_machine_residency:
+            total = res.busy_core_s + res.idle_core_s + res.gated_core_s
+            assert total == pytest.approx(res.num_cores * res.duration_s,
+                                          rel=1e-9)
+            assert 0.0 < res.mean_busy_frequency <= 1.6
+
+    def test_operational_fields(self, flat_result):
+        r = flat_result
+        assert r.fleet_operational_kgco2eq > 0.0
+        assert r.fleet_yearly_operational_kgco2eq > 0.0
+        assert r.fleet_yearly_total_kgco2eq == pytest.approx(
+            r.fleet_yearly_kgco2eq + r.fleet_yearly_operational_kgco2eq,
+            rel=1e-12)
+
+    def test_repricing(self, flat_result):
+        r = flat_result
+        assert r.fleet_energy_under() == r.fleet_energy_kwh
+        assert r.fleet_energy_under("flat-tdp") == r.fleet_energy_kwh
+        repriced = r.fleet_energy_under("minmax-linear")
+        assert repriced > 0.0 and repriced != r.fleet_energy_kwh
+        assert r.fleet_energy_under(MinMaxLinearModel()) == pytest.approx(
+            repriced, rel=1e-12)
+
+    def test_repricing_needs_residency(self, flat_result):
+        stripped = dataclasses.replace(flat_result,
+                                       per_machine_residency=None)
+        with pytest.raises(ValueError, match="per_machine_residency"):
+            stripped.fleet_energy_under("minmax-linear")
+
+    def test_json_roundtrip_and_scalars(self, flat_result):
+        r = flat_result
+        r2 = type(r).from_json(r.to_json())
+        assert r2 == r
+        assert r2.fleet_energy_under() == r.fleet_energy_kwh
+        s = r.scalars()
+        for key in ("power_model", "fleet_energy_kwh",
+                    "mean_machine_power_w",
+                    "fleet_yearly_operational_kgco2eq",
+                    "fleet_yearly_total_kgco2eq"):
+            assert key in s
+
+    def test_power_opts_flow_through(self):
+        r = run_experiment(ExperimentConfig(
+            power_opts={"utilization": 0.5}, **SHORT))
+        assert r.mean_machine_power_w == pytest.approx(3600.0 * 0.5,
+                                                       rel=1e-12)
+        assert r.power_opts == (("utilization", 0.5),)
+
+    def test_sweep_power_axis(self):
+        grid = run_policy_sweep(
+            ExperimentConfig(**SHORT), policies=("proposed",),
+            power_models=("flat-tdp", "minmax-linear"))
+        assert set(grid.keys()) == {("proposed", "flat-tdp"),
+                                    ("proposed", "minmax-linear")}
+        flat = grid[("proposed", "flat-tdp")]
+        mm = grid[("proposed", "minmax-linear")]
+        assert flat.power_model == "flat-tdp"
+        assert mm.power_model == "minmax-linear"
+        # same simulation, different pricing
+        assert flat.per_machine_degradation == mm.per_machine_degradation
+        assert flat.fleet_energy_kwh != mm.fleet_energy_kwh
+
+
+class TestTemporalAdjustment:
+    def test_zero_and_clean_passthrough(self):
+        assert idling.temporal_adjustment(0, 900.0, 400.0, 0) == 0
+        assert idling.temporal_adjustment(5, 400.0, 400.0, 0) == 5
+        assert idling.temporal_adjustment(-5, 410.0, 400.0, 0) == -5
+
+    def test_dirty_gating_amplified(self):
+        assert idling.temporal_adjustment(3, 900.0, 400.0, 0,
+                                          gate_gain=2.0) == 6
+
+    def test_dirty_wake_deferred(self):
+        assert idling.temporal_adjustment(-4, 900.0, 400.0, 0,
+                                          defer_frac=0.5) == -2
+        assert idling.temporal_adjustment(-4, 900.0, 400.0, 0,
+                                          defer_frac=1.0) == 0
+
+    def test_latency_guard_overrides_deferral(self):
+        assert idling.temporal_adjustment(-4, 900.0, 400.0, 3,
+                                          guard_tasks=2) == -4
+
+
+class TestCarbonAwarePolicy:
+    def test_option_validation(self):
+        from repro.core.policies.proposed import ProposedPolicy
+        with pytest.raises(ValueError, match="defer_frac"):
+            ProposedPolicy(defer_frac=1.5)
+        with pytest.raises(ValueError, match="gate_gain"):
+            ProposedPolicy(gate_gain=0.5)
+        with pytest.raises(ValueError, match="guard_tasks"):
+            ProposedPolicy(guard_tasks=-1)
+        with pytest.raises(ValueError, match="dirty_frac"):
+            ProposedPolicy(dirty_frac=0.0)
+
+    def test_never_dirty_is_bitexact(self):
+        """carbon_aware under a constant signal (never above dirty_frac
+        x mean) must reproduce the plain proposed run bitwise."""
+        base = run_experiment(ExperimentConfig(**SHORT))
+        aware = run_experiment(ExperimentConfig(
+            policy_opts={"carbon_aware": True, "intensity": "constant"},
+            **SHORT))
+        assert aware.per_machine_degradation == base.per_machine_degradation
+        assert aware.completed == base.completed
+        assert aware.p99_latency_s == base.p99_latency_s
+
+
+class TestFootprintGreedyRouter:
+    def test_flat_tdp_zero_grid_degenerates_to_carbon_greedy(self):
+        """With a residency-blind power model and a zero-carbon grid the
+        operational term vanishes, so footprint-greedy must make exactly
+        carbon-greedy's placements."""
+        cg = run_experiment(ExperimentConfig(router="carbon-greedy",
+                                             **SHORT))
+        fg = run_experiment(ExperimentConfig(
+            router="footprint-greedy",
+            router_opts={"power_model": "flat-tdp",
+                         "intensity": ConstantIntensity(0.0)},
+            **SHORT))
+        assert fg.per_machine_degradation == cg.per_machine_degradation
+        assert fg.completed == cg.completed
+
+    def test_option_validation(self):
+        from repro.sim.routing import FootprintGreedyRouter
+        with pytest.raises(ValueError, match="embodied_horizon_years"):
+            FootprintGreedyRouter(embodied_horizon_years=0.0)
+        with pytest.raises(ValueError, match="tau_s"):
+            FootprintGreedyRouter(tau_s=-1.0)
+
+
+#: diurnal grid with a short period so a 60 s run sees dirty and clean
+#: phases; shared by the policy, the carbon model, and the router.
+IOPTS = (("amplitude", 0.8), ("period_s", 40.0), ("phase", 0.0))
+
+
+class TestAcceptanceScenario:
+    """ISSUE 6 acceptance: under a diurnal intensity, carbon-aware
+    idling + footprint-greedy routing reduce total (operational +
+    embodied) gCO2eq vs the embodied-only baseline, with <10% p99
+    latency impact."""
+
+    @pytest.fixture(scope="class")
+    def pair(self):
+        common = dict(
+            policy="proposed",
+            carbon_model="operational-embodied",
+            carbon_opts={"intensity": "diurnal", "intensity_opts": IOPTS},
+            power_model="minmax-linear",
+            rate_rps=50.0, duration_s=60.0, seed=7)
+        baseline = run_experiment(ExperimentConfig(
+            router="carbon-greedy", **common))
+        treatment = run_experiment(ExperimentConfig(
+            policy_opts={"carbon_aware": True, "intensity": "diurnal",
+                         "intensity_opts": IOPTS},
+            router="footprint-greedy",
+            router_opts={"carbon_model": "operational-embodied",
+                         "carbon_opts": (("intensity", "diurnal"),
+                                         ("intensity_opts", IOPTS))},
+            **common))
+        return baseline, treatment
+
+    def test_total_carbon_reduced(self, pair):
+        baseline, treatment = pair
+        assert (treatment.fleet_yearly_total_kgco2eq
+                < baseline.fleet_yearly_total_kgco2eq)
+
+    def test_p99_latency_within_ten_percent(self, pair):
+        baseline, treatment = pair
+        assert treatment.p99_latency_s <= 1.10 * baseline.p99_latency_s
+
+    def test_service_preserved(self, pair):
+        baseline, treatment = pair
+        assert treatment.completed >= 0.99 * baseline.completed
