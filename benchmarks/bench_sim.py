@@ -94,6 +94,34 @@ def bench_end_to_end(cfg: ExperimentConfig, runs: int) -> dict:
     }
 
 
+def bench_telemetry_overhead(duration_s: float = 20.0,
+                             runs: int = 2) -> dict:
+    """Telemetry-off vs telemetry-on wall time on a short default-config
+    run — the price of the hub's event/series recording when enabled,
+    and evidence the `is not None` guards are free when disabled (the
+    off time here is the same path `bench_end_to_end` measures)."""
+    from repro.sim.runner import run_experiment
+
+    def timed(cfg):
+        walls = []
+        for _ in range(runs):
+            t0 = time.perf_counter()
+            run_experiment(cfg)
+            walls.append(time.perf_counter() - t0)
+        return min(walls)
+
+    base = ExperimentConfig(duration_s=duration_s)
+    off = timed(base)
+    on = timed(base.with_telemetry())
+    return {
+        "duration_s": duration_s,
+        "runs": runs,
+        "telemetry_off_s": round(off, 4),
+        "telemetry_on_s": round(on, 4),
+        "overhead_pct": round(100.0 * (on - off) / off, 2),
+    }
+
+
 def bench_manager_hot_path(n_ops: int = 20_000) -> dict:
     """Raw assign/release throughput of one CoreManager (proposed):
     the per-event cost every simulated CPU task pays."""
@@ -173,6 +201,9 @@ def main() -> None:
         "micro": {
             "manager_hot_path": bench_manager_hot_path(),
             "fleet_settle": bench_fleet_settle(),
+            "telemetry_overhead": bench_telemetry_overhead(
+                duration_s=8.0 if args.smoke else 20.0,
+                runs=1 if args.smoke else 2),
         },
     }
     if not args.smoke:

@@ -1,5 +1,7 @@
 """Shared benchmark helpers: CSV emission, experiment cache, and the
---scenario / --router CLI axes shared by fig2/fig6/fig7/fig8."""
+five registry-axis CLI flags (--scenario / --router / --carbon-model /
+--power-model, plus the policy grids the drivers sweep internally)
+shared by fig2/fig6/fig7/fig8, with --telemetry riding along."""
 from __future__ import annotations
 
 import argparse
@@ -12,6 +14,28 @@ DEFAULT_SCENARIOS = ("conversation-poisson",)
 DEFAULT_ROUTERS = ("jsq",)
 DEFAULT_CARBON_MODELS = ("linear-extension",)
 DEFAULT_POWER_MODELS = ("flat-tdp",)
+
+
+def axes_epilog() -> str:
+    """--help epilog enumerating every registered name on all five
+    pluggable axes (policy / scenario / router / carbon / power), built
+    from the live registries so it can never go stale again."""
+    from repro.carbon import available_carbon_models
+    from repro.core.policies import available_policies
+    from repro.power import available_power_models
+    from repro.sim.routing import available_routers
+    from repro.workloads import available_scenarios
+    rows = (
+        ("policy (driver-internal sweeps)", available_policies()),
+        ("--scenario", available_scenarios()),
+        ("--router", available_routers()),
+        ("--carbon-model", available_carbon_models()),
+        ("--power-model", available_power_models()),
+    )
+    lines = ["registry axes (see repro.registry):"]
+    for flag, names in rows:
+        lines.append(f"  {flag}: {', '.join(names)}")
+    return "\n".join(lines)
 
 
 def add_scenario_arg(parser: argparse.ArgumentParser) -> None:
@@ -66,29 +90,57 @@ def resolve_power_models(args: argparse.Namespace) -> tuple[str, ...]:
         else DEFAULT_POWER_MODELS
 
 
+def add_telemetry_arg(parser: argparse.ArgumentParser) -> None:
+    parser.add_argument(
+        "--telemetry", nargs="?", const="", default=None, metavar="DIR",
+        help="record streaming telemetry during the runs; with DIR, "
+        "export JSONL events / Chrome trace / series / Prometheus "
+        "snapshot per experiment under DIR (see repro.telemetry)")
+
+
+def resolve_telemetry(args: argparse.Namespace) -> dict | None:
+    """`telemetry_opts` dict for `ExperimentConfig`, or None when the
+    flag was absent (telemetry off)."""
+    v = getattr(args, "telemetry", None)
+    if v is None:
+        return None
+    return {"export_dir": v} if v else {}
+
+
+def _axes_parser(description: str | None) -> argparse.ArgumentParser:
+    return argparse.ArgumentParser(
+        description=description, epilog=axes_epilog(),
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+
+
 def parse_scenarios(description: str | None = None) -> tuple[str, ...]:
     """One-stop argparse for the fig drivers' `__main__` blocks."""
-    ap = argparse.ArgumentParser(description=description)
+    ap = _axes_parser(description)
     add_scenario_arg(ap)
     return resolve_scenarios(ap.parse_args())
 
 
 def parse_axes(description: str | None = None,
-               carbon: bool = False, power: bool = False) -> tuple:
+               carbon: bool = False, power: bool = False,
+               telemetry: bool = False) -> tuple:
     """argparse for drivers that sweep scenarios and routers; with
     `carbon=True` / `power=True` those accounting axes join the
-    returned tuple (in that order)."""
-    ap = argparse.ArgumentParser(description=description)
+    returned tuple (in that order), and `telemetry=True` appends the
+    resolved telemetry opts dict (or None)."""
+    ap = _axes_parser(description)
     add_scenario_arg(ap)
     add_router_arg(ap)
     if carbon:
         add_carbon_model_arg(ap)
     if power:
         add_power_model_arg(ap)
+    if telemetry:
+        add_telemetry_arg(ap)
     args = ap.parse_args()
     axes = (resolve_scenarios(args), resolve_routers(args))
     axes += ((resolve_carbon_models(args),) if carbon else ())
-    return axes + ((resolve_power_models(args),) if power else ())
+    axes += ((resolve_power_models(args),) if power else ())
+    return axes + ((resolve_telemetry(args),) if telemetry else ())
 
 
 def emit(name: str, rows: list[dict]) -> None:

@@ -1,0 +1,110 @@
+"""CI drift gate: run the default mini-grid and diff it against the
+committed golden `SweepResult` — fail loudly on silent metric drift.
+
+    PYTHONPATH=src python benchmarks/drift_gate.py             # check
+    PYTHONPATH=src python benchmarks/drift_gate.py --update    # re-pin
+
+The mini-grid is small on purpose (2 policies x 2 routers, 8 s @ 40
+rps) — it exists to catch *unintended* numeric drift between commits,
+not to benchmark. Every scalar `ExperimentResult` field in the grid is
+compared via `SweepResult.diff_scalars`; fields are tolerance-tagged in
+`TOLERANCES` (relative), everything untagged must match exactly
+(including `config_hash`, so an `ExperimentConfig` field addition —
+which changes every fingerprint — trips the gate by design: re-pin
+with `--update` and say why in the commit).
+
+Exit status: 0 = no drift, 1 = drift (diff printed), 2 = golden
+missing (run `--update` once and commit the file).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from repro.sim import ExperimentConfig, SweepResult, run_policy_sweep
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "..",
+                           "experiments", "golden_minigrid.json")
+
+#: per-field relative tolerances; untagged fields must match exactly.
+#: The simulator is deterministic, so these are 0.0 today — the tags
+#: exist so a field that legitimately picks up platform jitter (e.g. a
+#: future wall-time-derived scalar) can be loosened without weakening
+#: the exact check on everything else.
+TOLERANCES: dict[str, float] = {}
+
+
+def mini_grid_config() -> ExperimentConfig:
+    return ExperimentConfig(duration_s=8.0, rate_rps=40.0, seed=0)
+
+
+def run_mini_grid() -> SweepResult:
+    return run_policy_sweep(mini_grid_config(),
+                            policies=("linux", "proposed"),
+                            routers=("jsq", "round-robin"))
+
+
+def filtered_diff(current: SweepResult,
+                  golden: SweepResult) -> dict:
+    """`diff_scalars` minus differences inside their field's tagged
+    tolerance."""
+    raw = current.diff_scalars(golden, rel_tol=0.0)
+    out = {}
+    for key, fields in raw.items():
+        kept = {}
+        for field, (a, b) in fields.items():
+            tol = TOLERANCES.get(field, 0.0)
+            if (tol and isinstance(a, float) and isinstance(b, float)
+                    and b and abs(a - b) <= tol * abs(b)):
+                continue
+            kept[field] = (a, b)
+        if kept:
+            out[key] = kept
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--update", action="store_true",
+                    help="re-capture the golden mini-grid instead of "
+                    "checking against it")
+    ap.add_argument("--golden", default=GOLDEN_PATH,
+                    help="golden SweepResult path")
+    args = ap.parse_args()
+
+    current = run_mini_grid()
+    if args.update:
+        os.makedirs(os.path.dirname(args.golden), exist_ok=True)
+        current.save(args.golden)
+        print(f"golden mini-grid re-pinned: "
+              f"{os.path.normpath(args.golden)} "
+              f"({len(current)} cells)")
+        return 0
+
+    if not os.path.exists(args.golden):
+        print(f"drift gate: golden missing at "
+              f"{os.path.normpath(args.golden)} — run with --update "
+              f"and commit the file", file=sys.stderr)
+        return 2
+
+    golden = SweepResult.load(args.golden)
+    diff = filtered_diff(current, golden)
+    if not diff:
+        print(f"drift gate: {len(current)} cells match the golden "
+              f"(no metric drift)")
+        return 0
+    print("drift gate: METRIC DRIFT vs committed golden:",
+          file=sys.stderr)
+    for key, fields in diff.items():
+        for field, (cur, gold) in fields.items():
+            print(f"  {key!r} {field}: current={cur!r} "
+                  f"golden={gold!r}", file=sys.stderr)
+    print(f"({sum(len(f) for f in diff.values())} field(s) across "
+          f"{len(diff)} cell(s); if intentional, re-pin with "
+          f"--update and explain in the commit)", file=sys.stderr)
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

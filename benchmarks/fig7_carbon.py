@@ -34,7 +34,8 @@ N_MACHINES = 22
 def run(duration_s: float = 120.0, rates=(40, 70, 100),
         scenarios=DEFAULT_SCENARIOS, routers=DEFAULT_ROUTERS,
         carbon_models=DEFAULT_CARBON_MODELS,
-        power_models=DEFAULT_POWER_MODELS) -> list[dict]:
+        power_models=DEFAULT_POWER_MODELS,
+        telemetry: dict | None = None) -> list[dict]:
     rows = []
     os.makedirs(RESULTS_DIR, exist_ok=True)
     for scenario in scenarios:
@@ -47,10 +48,13 @@ def run(duration_s: float = 120.0, rates=(40, 70, 100),
                 # `fleet_energy_under`, exact) instead of re-running
                 # the sweep. The first power model prices the persisted
                 # grid's own energy scalars.
-                res = run_policy_sweep(ExperimentConfig(
+                cfg = ExperimentConfig(
                     num_cores=40, rate_rps=rate, duration_s=duration_s,
                     seed=1, scenario=scenario, router=router,
-                    power_model=power_models[0]))
+                    power_model=power_models[0])
+                if telemetry is not None:
+                    cfg = cfg.with_telemetry(**telemetry)
+                res = run_policy_sweep(cfg)
                 res.save(os.path.join(
                     RESULTS_DIR,
                     f"fig7_sweep_{scenario}_{router}_r{rate}.json"))
@@ -91,7 +95,7 @@ def run(duration_s: float = 120.0, rates=(40, 70, 100),
 
 
 if __name__ == "__main__":
-    scenarios, routers, carbon_models, power_models = parse_axes(
-        __doc__, carbon=True, power=True)
+    scenarios, routers, carbon_models, power_models, telemetry = \
+        parse_axes(__doc__, carbon=True, power=True, telemetry=True)
     run(scenarios=scenarios, routers=routers, carbon_models=carbon_models,
-        power_models=power_models)
+        power_models=power_models, telemetry=telemetry)

@@ -19,20 +19,24 @@ import sys
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    from benchmarks.common import (add_carbon_model_arg,
+                                   add_power_model_arg, add_router_arg,
+                                   add_scenario_arg, add_telemetry_arg,
+                                   axes_epilog, resolve_carbon_models,
+                                   resolve_power_models, resolve_routers,
+                                   resolve_scenarios, resolve_telemetry)
+    ap = argparse.ArgumentParser(
+        epilog=axes_epilog(),
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--quick", action="store_true",
                     help="short traces (CI); full runs match the paper")
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig2,fig6,fig7,fig8,kern,ablations")
-    from benchmarks.common import (add_carbon_model_arg,
-                                   add_power_model_arg, add_router_arg,
-                                   add_scenario_arg, resolve_carbon_models,
-                                   resolve_power_models, resolve_routers,
-                                   resolve_scenarios)
     add_scenario_arg(ap)
     add_router_arg(ap)
     add_carbon_model_arg(ap)
     add_power_model_arg(ap)
+    add_telemetry_arg(ap)
     args = ap.parse_args()
     dur = 30.0 if args.quick else 120.0
     only = set(args.only.split(",")) if args.only else None
@@ -40,6 +44,7 @@ def main() -> None:
     routers = resolve_routers(args)
     carbon_models = resolve_carbon_models(args)
     power_models = resolve_power_models(args)
+    telemetry = resolve_telemetry(args)
 
     def want(name: str) -> bool:
         return only is None or name in only
@@ -58,7 +63,7 @@ def main() -> None:
     if want("fig7"):
         fig7_carbon.run(duration_s=dur, scenarios=scenarios,
                         routers=routers, carbon_models=carbon_models,
-                        power_models=power_models)
+                        power_models=power_models, telemetry=telemetry)
     if want("fig8"):
         fig8_idle_cores.run(duration_s=dur, scenarios=scenarios,
                             routers=routers)

@@ -39,12 +39,22 @@ def main() -> None:
                     "operational+embodied footprint line")
     ap.add_argument("--save", default=None, metavar="PATH",
                     help="write the sweep as a SweepResult JSON")
+    ap.add_argument("--telemetry", nargs="?", const="", default=None,
+                    metavar="DIR",
+                    help="record streaming telemetry; with DIR, export "
+                    "JSONL events / Chrome trace / series / Prometheus "
+                    "snapshot per policy run under DIR "
+                    "(see repro.telemetry)")
     args = ap.parse_args()
 
-    res = run_policy_sweep(ExperimentConfig(
+    cfg = ExperimentConfig(
         num_cores=args.cores, rate_rps=args.rate,
         duration_s=args.duration, seed=1, router=args.router,
-        carbon_model=args.carbon_model, power_model=args.power_model))
+        carbon_model=args.carbon_model, power_model=args.power_model)
+    if args.telemetry is not None:
+        cfg = cfg.with_telemetry(
+            **({"export_dir": args.telemetry} if args.telemetry else {}))
+    res = run_policy_sweep(cfg)
     linux, proposed = res["linux"], res["proposed"]
 
     print(f"cluster: 22 machines (5 prompt + 17 token), {args.cores}-core "
@@ -89,6 +99,16 @@ def main() -> None:
           f"{fp.operational_kg:.0f}, CPU embodied {fp.cpu_embodied_kg:.1f}, "
           f"accel embodied {fp.gpu_embodied_kg:.1f}; embodied share "
           f"{100*fp.embodied_frac:.1f}%)")
+
+    if args.telemetry is not None:
+        s = proposed.telemetry_summary or {}
+        kinds = s.get("event_kinds", {})
+        print(f"\ntelemetry: {s.get('events', 0)} events "
+              f"({', '.join(f'{k}:{v}' for k, v in kinds.items())}), "
+              f"{len(s.get('series', {}))} series, "
+              f"{len(s.get('timelines', {}))} timelines")
+        for surface, path in (s.get("export") or {}).items():
+            print(f"  {surface}: {path}")
 
     if args.save:
         res.save(args.save)

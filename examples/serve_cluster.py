@@ -4,8 +4,16 @@ the aging-aware core manager governs the host CPU, then replay the SAME
 workload shape at cluster scale in the simulator and report the paper's
 headline metrics.
 
-  PYTHONPATH=src python examples/serve_cluster.py
+  PYTHONPATH=src python examples/serve_cluster.py [--metrics-port PORT]
+
+With `--metrics-port`, the serving demo additionally exposes the
+engine's live Prometheus-style snapshot at
+`http://127.0.0.1:PORT/metrics` while it drains — the same metrics
+surface the simulator exports (`repro.telemetry.prometheus_text`),
+which is what lets a simulator run shadow a live engine as a digital
+twin.
 """
+import argparse
 import time
 
 import jax
@@ -15,15 +23,23 @@ from repro.configs import get_smoke_config
 from repro.models import Model
 from repro.serving.engine import InferenceEngine
 from repro.sim import ExperimentConfig, carbon_comparison, run_policy_sweep
+from repro.telemetry import TelemetryHub, start_metrics_server
 
 
-def serve_demo() -> None:
+def serve_demo(metrics_port: int | None = None) -> None:
     print("=== serving demo (llama3-8b reduced config) ===")
     cfg = get_smoke_config("llama3-8b")
     model = Model(cfg)
     params = model.init(jax.random.key(0))
     engine = InferenceEngine(model, params, max_batch=4, max_len=96,
-                             policy="proposed", num_host_cores=16)
+                             policy="proposed", num_host_cores=16,
+                             telemetry=TelemetryHub())
+    server = None
+    if metrics_port is not None:
+        server = start_metrics_server(engine.prometheus_text,
+                                      port=metrics_port)
+        print(f"metrics endpoint: "
+              f"http://127.0.0.1:{server.server_port}/metrics")
     rng = np.random.default_rng(0)
     t0 = time.time()
     for _ in range(12):
@@ -35,7 +51,16 @@ def serve_demo() -> None:
           f"({144/dt:,.1f} tok/s)")
     rep = engine.host_cpu_report()
     print(f"host CPU: active {rep['active_cores']}/16 cores, "
-          f"{rep['assigns']} CPU tasks routed through Algorithm 1\n")
+          f"{rep['assigns']} CPU tasks routed through Algorithm 1")
+    snapshot = engine.prometheus_text()
+    head = [ln for ln in snapshot.splitlines()
+            if not ln.startswith("#")][:6]
+    print("prometheus snapshot (first lines):")
+    for ln in head:
+        print(f"  {ln}")
+    if server is not None:
+        server.shutdown()
+    print()
 
 
 def cluster_demo() -> None:
@@ -68,6 +93,12 @@ def routing_demo() -> None:
 
 
 if __name__ == "__main__":
-    serve_demo()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="expose the engine's Prometheus-style snapshot "
+                    "at /metrics on this port during the serving demo "
+                    "(0 = ephemeral)")
+    args = ap.parse_args()
+    serve_demo(metrics_port=args.metrics_port)
     cluster_demo()
     routing_demo()

@@ -55,6 +55,8 @@ class CoreManager:
         policy_opts: dict | None = None,
         on_promote=None,
         res_window_s: float = 1.0,
+        telemetry=None,
+        telemetry_id: int = 0,
     ):
         self.num_cores = num_cores
         # Called as on_promote(task_id, core, now, speed) whenever a task
@@ -136,6 +138,15 @@ class CoreManager:
         # task -> settled frequency factor it runs at (assign/promote
         # time); consumed on release for frequency-weighted busy time.
         self._task_speed: dict[int, float] = {}
+        # Telemetry sink (repro.telemetry.TelemetryHub) or None. Hot
+        # paths guard every emission with one `is not None` test so the
+        # disabled cost is exactly that test — recording is pure
+        # observation and never touches aging state or the RNG.
+        self._tel = telemetry if (
+            telemetry is not None and getattr(telemetry, "enabled", True)
+        ) else None
+        self._tel_id = int(telemetry_id)
+        self._tel_tick = 0
 
     @staticmethod
     def _resolve_policy(policy, policy_opts) -> CorePolicy:
@@ -313,6 +324,12 @@ class CoreManager:
             self.task_start[task_id] = now
             self._oversub_accounted[task_id] = now
             self.metrics.oversub_assigns += 1
+            tel = self._tel
+            if tel is not None:
+                tel.inc("oversub_assigns")
+                tel.event("oversub", now, machine=self._tel_id,
+                          task=task_id, cause="oversubscription",
+                          waiting=len(self.oversub_tasks))
             # Oversubscribed tasks time-share already-busy cores, so the
             # settled frequency of the fastest *busy* core bounds their
             # speed — pristine idle (or power-gated) cores are not
@@ -327,6 +344,11 @@ class CoreManager:
         speed = self.f0.item(core) * (1.0 - self.dvth.item(core)
                                       / self._headroom)
         self._task_speed[task_id] = speed
+        tel = self._tel
+        if tel is not None:
+            tel.inc("assigns")
+            tel.event("assign", now, machine=self._tel_id, core=core,
+                      task=task_id, speed=speed)
         return speed
 
     def release(self, task_id: int, now: float) -> None:
@@ -340,6 +362,9 @@ class CoreManager:
             self.oversub_tasks.discard(task_id)
             self._task_speed.pop(task_id, None)
             self._account_oversub(task_id, now)
+            if self._tel is not None:
+                self._tel.event("release", now, machine=self._tel_id,
+                                core=-1, task=task_id)
             if self.oversub_tasks:
                 self._promote_oversubscribed(now)
             return
@@ -354,6 +379,9 @@ class CoreManager:
         self._busy_cores.discard(core)
         self.idle_since[core] = now
         self._push_free(core)
+        if self._tel is not None:
+            self._tel.event("release", now, machine=self._tel_id,
+                            core=core, task=task_id)
         self.policy.on_release(self._view, core)
         if self.oversub_tasks:
             self._promote_oversubscribed(now)
@@ -387,6 +415,11 @@ class CoreManager:
             speed = aging.frequency_scalar(
                 self.params, float(self.f0[core]), float(self.dvth[core]))
             self._task_speed[task_id] = speed
+            if self._tel is not None:
+                self._tel.inc("promotions")
+                self._tel.event("promote", now, machine=self._tel_id,
+                                core=core, task=task_id, speed=speed,
+                                cause="promotion")
             if self.on_promote is not None:
                 self.on_promote(task_id, core, now, speed)
 
@@ -411,6 +444,17 @@ class CoreManager:
         for task_id in self.oversub_tasks:
             self._account_oversub(task_id, now, final=False)
 
+        tel = self._tel
+        if tel is not None:
+            mid = self._tel_id
+            tel.observe(f"m{mid}/active_cores", now, active)
+            tel.observe(f"m{mid}/oversub_tasks", now, oversub)
+            self._tel_tick += 1
+            if self._tel_tick % tel.timeline_every == 0:
+                # settle_all just ran, so dvth is settled to `now`;
+                # frequency() here is a pure read of Eq. 1.
+                self._record_timelines(tel, now)
+
         corr = self.policy.periodic(self._view)
         if corr is None:
             return
@@ -423,6 +467,8 @@ class CoreManager:
             raise ValueError(f"policy {self.policy.name!r} tried to idle "
                              f"cores {[int(i) for i in busy]} while they "
                              f"run tasks")
+        cause = getattr(corr, "cause", "policy")
+        deferred = getattr(corr, "deferred_wakes", 0)
         for i in corr.to_idle:
             # settle_all already brought core i to `now`; close its idle
             # window and power-gate.
@@ -431,11 +477,24 @@ class CoreManager:
             self._record_idle_end(i, idle_dur if idle_dur > 0.0 else 0.0)
             self.c_state[i] = CState.DEEP_IDLE
             self._stamp[i] += 1          # no longer in the free-core heap
+            if tel is not None:
+                tel.inc("gates")
+                tel.event("gate", now, machine=self._tel_id, core=i,
+                          cause=cause)
         for i in corr.to_wake:
             i = int(i)
             self.c_state[i] = CState.ACTIVE
             self.idle_since[i] = now
             self._push_free(i)
+            if tel is not None:
+                tel.inc("wakes")
+                tel.event("wake", now, machine=self._tel_id, core=i,
+                          cause=cause)
+        if tel is not None and deferred:
+            tel.inc("carbon_deferrals", deferred)
+            tel.event("carbon_deferral", now, machine=self._tel_id,
+                      deferred=deferred, oversub=oversub,
+                      cause="carbon-aware-deferral")
         # settle_all already advanced the residency clock to `now`, so the
         # gated-count change takes effect from this instant. Recount from
         # c_state (not a +/- delta) so nonstandard corrections can't drift
@@ -447,6 +506,17 @@ class CoreManager:
     # ------------------------------------------------------------------ #
     # observability
     # ------------------------------------------------------------------ #
+    def _record_timelines(self, tel, now: float) -> None:
+        """Per-core aging/frequency/regime snapshot into the hub's
+        timelines (called from `periodic` after `settle_all`, so `dvth`
+        is already settled to `now`; pure reads, no mutation)."""
+        mid = self._tel_id
+        freq = aging.frequency(self.params, self.f0, self.dvth)
+        tel.timeline(f"m{mid}/freq").record(now, freq)
+        tel.timeline(f"m{mid}/dvth").record(now, self.dvth)
+        tel.timeline(f"m{mid}/cstate").record(
+            now, self.c_state.astype(np.float64))
+
     def _frequencies_now(self, settle: bool = True) -> np.ndarray:
         if settle:
             self.settle_all(self.now)

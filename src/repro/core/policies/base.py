@@ -132,10 +132,19 @@ class IdleCorrection:
     The manager applies it: `to_idle` cores are settled, their idle
     window recorded, and power-gated (C6); `to_wake` cores return to C0.
     Cores running a task must never appear in `to_idle`.
+
+    `cause` attributes the decision for telemetry ("policy" for the
+    plain reaction function, "carbon-aware" when
+    `idling.temporal_adjustment` reshaped it); `deferred_wakes` counts
+    wake-ups the carbon-aware path held back this period. Both are
+    observability-only — the manager applies `to_idle`/`to_wake`
+    identically regardless.
     """
 
     to_idle: np.ndarray = _EMPTY
     to_wake: np.ndarray = _EMPTY
+    cause: str = "policy"
+    deferred_wakes: int = 0
 
     def __bool__(self) -> bool:
         return bool(len(self.to_idle) or len(self.to_wake))

@@ -68,14 +68,24 @@ class ProposedPolicy(CorePolicy):
             int(assigned_mask.sum()),
             view.oversub_count,
         )
+        cause = "policy"
+        deferred = 0
         if self._intensity is not None:
+            corr0 = corr
             corr = idling.temporal_adjustment(
                 corr, self._intensity.g_per_kwh(view.now),
                 self._intensity_mean, view.oversub_count,
                 dirty_frac=self.dirty_frac, defer_frac=self.defer_frac,
                 guard_tasks=self.guard_tasks, gate_gain=self.gate_gain)
+            if corr != corr0:
+                cause = "carbon-aware"
+                if corr0 < 0:
+                    # corr0 wanted -corr0 wake-ups; the adjustment kept
+                    # only -corr of them (corr > corr0 here).
+                    deferred = corr - corr0
         to_idle, to_wake = idling.apply_correction(
             corr, active_mask, assigned_mask, view.dvth)
-        if not (len(to_idle) or len(to_wake)):
+        if not (len(to_idle) or len(to_wake) or deferred):
             return None
-        return IdleCorrection(to_idle=to_idle, to_wake=to_wake)
+        return IdleCorrection(to_idle=to_idle, to_wake=to_wake,
+                              cause=cause, deferred_wakes=deferred)

@@ -42,7 +42,7 @@ class InferenceEngine:
                  eos_id: int | None = None,
                  clock: Callable[[], float] = time.monotonic,
                  greedy: bool = True, temperature: float = 1.0,
-                 sample_seed: int = 0):
+                 sample_seed: int = 0, telemetry=None):
         cfg = model.cfg
         if cfg.family in ("hybrid", "audio") or cfg.is_encdec:
             raise NotImplementedError(
@@ -58,8 +58,13 @@ class InferenceEngine:
         self._sample_key = jax.random.key(sample_seed)
         self.clock = clock
         self._t0 = clock()
+        # Live serving shares the simulator's telemetry surface: the same
+        # hub type, the same probes, exported via `prometheus_text()` —
+        # first step toward running the simulator as a digital twin.
+        self.telemetry = telemetry
         self.core_manager = CoreManager(num_host_cores, policy=policy,
-                                        rng=np.random.default_rng(0))
+                                        rng=np.random.default_rng(0),
+                                        telemetry=telemetry)
         self._task_ids = TaskIdAllocator()   # per-engine CPU-task id stream
         self._last_idle_check = 0.0
 
@@ -203,3 +208,23 @@ class InferenceEngine:
             "active_cores": int((m.c_state == 0).sum()),
             "assigns": m.metrics.assigns,
         }
+
+    def prometheus_text(self) -> str:
+        """Prometheus-style text snapshot of the engine's host CPU —
+        the telemetry hub's probes (when one is attached) plus live
+        aging gauges, one metrics surface shared with the simulator's
+        exports (`repro.telemetry.prometheus_text`). Serve it with
+        `repro.telemetry.start_metrics_server(engine.prometheus_text)`.
+        """
+        from repro.telemetry import TelemetryHub, prometheus_text
+        hub = self.telemetry if self.telemetry is not None \
+            else TelemetryHub()
+        m = self.core_manager
+        extra = {
+            "host_freq_cv": m.frequency_cv(self._now()),
+            "host_mean_degradation": m.mean_frequency_degradation(),
+            "host_active_cores": float((m.c_state == 0).sum()),
+            "host_assigns": float(m.metrics.assigns),
+            "host_oversub_assigns": float(m.metrics.oversub_assigns),
+        }
+        return prometheus_text(hub, extra_gauges=extra)

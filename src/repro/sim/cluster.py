@@ -54,7 +54,8 @@ class Machine:
     """One inference server: host CPU (CoreManager) + a GPU instance."""
 
     def __init__(self, machine_id: int, cfg: ExperimentConfig,
-                 queue: EventQueue, task_ids: TaskIdAllocator | None = None):
+                 queue: EventQueue, task_ids: TaskIdAllocator | None = None,
+                 telemetry=None):
         self.machine_id = machine_id
         self.queue = queue
         # Cluster-shared id stream (falls back to a private one so a
@@ -69,6 +70,8 @@ class Machine:
             idling_period_s=cfg.idling_period_s,
             on_promote=self._on_promote,
             res_window_s=cfg.resolved_power_window_s,
+            telemetry=telemetry,
+            telemetry_id=machine_id,
         )
         self.running_cpu_tasks = 0
         self.task_count_samples: list[int] = []
@@ -264,16 +267,23 @@ class TokenInstance:
 class Cluster:
     """22-machine phase-splitting cluster + cluster-level scheduler."""
 
-    def __init__(self, cfg: ExperimentConfig):
+    def __init__(self, cfg: ExperimentConfig, telemetry=None):
         self.cfg = cfg
         self.queue = EventQueue()
+        # Telemetry sink shared by every machine's CoreManager and the
+        # routing/sampling paths below (None = zero-cost off; the hub is
+        # owned by `run_experiment`, which exports it after the run).
+        self.telemetry = telemetry if (
+            telemetry is not None and getattr(telemetry, "enabled", True)
+        ) else None
         # One id stream per simulation (not per process): concurrent
         # clusters can't interleave ids, while within this cluster ids
         # stay globally ordered by spawn time — the property the
         # manager's oversubscription FIFO relies on.
         self.task_ids = TaskIdAllocator()
         self.machines = [
-            Machine(i, cfg, self.queue, self.task_ids)
+            Machine(i, cfg, self.queue, self.task_ids,
+                    telemetry=self.telemetry)
             for i in range(cfg.n_machines)
         ]
         self.prompt_instances = [PromptInstance(m)
@@ -300,6 +310,18 @@ class Cluster:
         if not 0 <= idx < n:
             raise ValueError(f"router {self.router.name!r} returned "
                              f"{kind} index {idx}, outside [0, {n})")
+        tel = self.telemetry
+        if tel is not None:
+            # Record the FleetView the router judged against — queue
+            # depths (prompt) or decode loads (token) — so placement
+            # decisions are auditable after the run.
+            view = (self.fleet.prompt_depths() if kind == "prompt"
+                    else self.fleet.token_loads())
+            machine = idx if kind == "prompt" else self.cfg.n_prompt + idx
+            tel.inc(f"routes_{kind}")
+            tel.event("route", self.queue.now, machine=machine,
+                      phase=kind, chosen=idx, router=self.router.name,
+                      depths=[int(d) for d in view])
         return idx
 
     def submit_request(self, req: Request) -> None:
@@ -339,9 +361,22 @@ class Cluster:
             if t[0] <= duration_s:
                 self.queue.schedule_in(period, periodic)
 
+        tel = self.telemetry
+
         def sampler(t=[0.0]):
             for m in self.machines:
                 m.task_count_samples.append(m.running_cpu_tasks)
+            if tel is not None:
+                now = self.queue.now
+                tel.observe("fleet/prompt_queue_depth", now,
+                            float(sum(len(p.queue) + p.busy
+                                      for p in self.prompt_instances)))
+                tel.observe("fleet/decode_load", now,
+                            float(sum(ti.load
+                                      for ti in self.token_instances)))
+                tel.observe("fleet/cpu_tasks", now,
+                            float(sum(m.running_cpu_tasks
+                                      for m in self.machines)))
             t[0] += sample_period_s
             if t[0] <= duration_s:
                 self.queue.schedule_in(sample_period_s, sampler)

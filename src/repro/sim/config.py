@@ -69,6 +69,13 @@ class ExperimentConfig:
     # residency-window width for temporal power x intensity integration;
     # 0.0 = auto (`max(idling_period_s, duration_s / 1024)`)
     power_window_s: float = 0.0
+    # streaming telemetry (repro.telemetry): False = zero-cost off.
+    # `telemetry_opts` carries TelemetryHub options (window_s,
+    # max_events, max_windows, timeline_every, timeline_maxlen) plus the
+    # runner-level `export_dir` (write JSONL/trace/series/prom exports
+    # there after the run).
+    telemetry: bool = False
+    telemetry_opts: tuple[tuple[str, Any], ...] = ()
 
     def __post_init__(self):
         # Normalize: accept any hyphen/underscore spelling for registry
@@ -86,7 +93,7 @@ class ExperimentConfig:
         object.__setattr__(self, "power_model",
                            canonical_power_model_name(self.power_model))
         for field in ("policy_opts", "scenario_opts", "router_opts",
-                      "carbon_opts", "power_opts"):
+                      "carbon_opts", "power_opts", "telemetry_opts"):
             opts = getattr(self, field)
             if isinstance(opts, Mapping):
                 opts = opts.items()
@@ -128,6 +135,11 @@ class ExperimentConfig:
     def power_options(self) -> dict[str, Any]:
         """`power_opts` as a plain kwargs dict."""
         return dict(self.power_opts)
+
+    @property
+    def telemetry_options(self) -> dict[str, Any]:
+        """`telemetry_opts` as a plain kwargs dict."""
+        return dict(self.telemetry_opts)
 
     @property
     def resolved_power_window_s(self) -> float:
@@ -184,3 +196,10 @@ class ExperimentConfig:
         return dataclasses.replace(self, power_model=power_model,
                                    power_opts=tuple(sorted(
                                        power_opts.items())))
+
+    def with_telemetry(self, **telemetry_opts) -> "ExperimentConfig":
+        """Same experiment, telemetry recording on (opts reset unless
+        given; see `repro.telemetry.TelemetryHub` + `export_dir`)."""
+        return dataclasses.replace(self, telemetry=True,
+                                   telemetry_opts=tuple(sorted(
+                                       telemetry_opts.items())))

@@ -39,7 +39,8 @@ def _role_weighted_cv(degs: np.ndarray, n_prompt: int) -> float:
 
 def collect(cluster: Cluster, cfg: ExperimentConfig,
             carbon_model: CarbonModel | None = None,
-            power_model: PowerModel | None = None) -> ExperimentResult:
+            power_model: PowerModel | None = None,
+            telemetry=None) -> ExperimentResult:
     """Aggregate a finished cluster run into an `ExperimentResult`.
 
     The config supplies the experiment identity (policy / scenario /
@@ -48,7 +49,9 @@ def collect(cluster: Cluster, cfg: ExperimentConfig,
     rate_rps, ...)` keyword pile is gone. `carbon_model` /
     `power_model` let a caller that already resolved `cfg.carbon_model`
     / `cfg.power_model` (e.g. `run_experiment`'s fail-fast check) pass
-    them in instead of constructing them twice.
+    them in instead of constructing them twice. `telemetry` (a
+    `repro.telemetry.TelemetryHub`) additionally receives the fleet's
+    per-window power / energy / intensity / operational-carbon rows.
     """
     cvs, degs, idle_all = [], [], []
     task_samples = []
@@ -107,6 +110,9 @@ def collect(cluster: Cluster, cfg: ExperimentConfig,
     else:
         yearly_op = mean_power_w = float("nan")
 
+    if telemetry is not None:
+        _emit_carbon_windows(telemetry, residencies, power, intensity)
+
     def pct(x):
         return {p: float(np.percentile(x, p)) for p in PERCENTILES}
 
@@ -150,6 +156,30 @@ def collect(cluster: Cluster, cfg: ExperimentConfig,
         provenance=Provenance(config_hash=cfg.fingerprint(),
                               seed=cfg.seed),
     )
+
+
+def _emit_carbon_windows(telemetry, residencies, power, intensity) -> None:
+    """Fleet per-window power/energy/intensity/operational-carbon rows
+    into the hub's `fleet/carbon_windows` timeline — the same windowed
+    integral `operational_g` prices, kept visible instead of collapsed
+    to one scalar. Row layout: `(window_s, fleet_power_w, energy_kwh,
+    g_per_kwh, operational_g)`; pure reads of frozen residencies."""
+    fleet: dict[float, list[float]] = {}    # t_start -> [elapsed, joules]
+    for r in residencies:
+        f = r.mean_busy_frequency
+        n = r.num_cores
+        for t_start, elapsed, bf, if_, gf in r.iter_windows():
+            w = fleet.setdefault(t_start, [0.0, 0.0])
+            w[0] = max(w[0], elapsed)
+            w[1] += power.machine_power_w(bf, if_, gf, f, n) * elapsed
+    tl = telemetry.timeline("fleet/carbon_windows",
+                            maxlen=max(len(fleet), 1))
+    for t_start in sorted(fleet):
+        elapsed, joules = fleet[t_start]
+        g = intensity.g_per_kwh(t_start + 0.5 * elapsed)
+        kwh = joules / 3.6e6
+        power_w = joules / elapsed if elapsed > 0 else 0.0
+        tl.record(t_start, (elapsed, power_w, kwh, g, kwh * g))
 
 
 def carbon_comparison(linux_metrics: ExperimentResult,

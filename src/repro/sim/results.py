@@ -159,6 +159,12 @@ class ExperimentResult:
     fleet_operational_kgco2eq: float = float("nan")
     fleet_yearly_operational_kgco2eq: float = float("nan")
     fleet_yearly_total_kgco2eq: float = float("nan")
+    # telemetry digest (`TelemetryHub.summary()` + export paths) when the
+    # run recorded telemetry; None otherwise. A JSON-safe plain dict —
+    # deliberately NOT part of `scalars()`: it carries wall-time gauges
+    # that legitimately differ between bit-identical reruns, so it must
+    # never trip `diff_scalars` drift checks.
+    telemetry_summary: dict[str, Any] | None = None
     provenance: Provenance | None = None
 
     # ------------------------------------------------------------------ #

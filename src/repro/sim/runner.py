@@ -44,12 +44,20 @@ from repro.workloads import canonical_scenario_name, get_scenario
 DEFAULT_SWEEP = ("linux", "least-aged", "proposed")
 
 
-def run_experiment(cfg: ExperimentConfig) -> ExperimentResult:
+def run_experiment(cfg: ExperimentConfig,
+                   telemetry=None) -> ExperimentResult:
     if not isinstance(cfg, ExperimentConfig):
         raise TypeError(
             "run_experiment takes an ExperimentConfig (the pre-registry "
             "run_experiment(policy, **kwargs) signature was removed); "
             f"got {cfg!r}")
+    # Streaming telemetry (repro.telemetry): `cfg.telemetry=True` builds
+    # a hub from `cfg.telemetry_opts`; a caller-supplied hub wins (so a
+    # long-lived hub can span several runs). None = zero-cost off.
+    hub = telemetry
+    if hub is None and cfg.telemetry:
+        from repro.telemetry import TelemetryHub
+        hub = TelemetryHub.from_opts(cfg.telemetry_options)
     # Resolve every axis up front so a typo'd name fails before the
     # simulation runs, not after (policy and router resolve inside
     # Cluster.__init__ below); the resolved carbon model is handed to
@@ -57,12 +65,59 @@ def run_experiment(cfg: ExperimentConfig) -> ExperimentResult:
     carbon_model = get_carbon_model(cfg.carbon_model, **cfg.carbon_options)
     power_model = get_power_model(cfg.power_model, **cfg.power_options)
     scenario = get_scenario(cfg.scenario, **cfg.scenario_options)
-    trace = scenario.generate(rate_rps=cfg.rate_rps,
-                              duration_s=cfg.duration_s, seed=cfg.seed)
-    cluster = Cluster(cfg)
-    cluster.run(trace, cfg.duration_s, sample_period_s=cfg.sample_period_s)
-    return metrics_mod.collect(cluster, cfg, carbon_model=carbon_model,
-                               power_model=power_model)
+    if hub is None:
+        trace = scenario.generate(rate_rps=cfg.rate_rps,
+                                  duration_s=cfg.duration_s, seed=cfg.seed)
+        cluster = Cluster(cfg)
+        cluster.run(trace, cfg.duration_s,
+                    sample_period_s=cfg.sample_period_s)
+        return metrics_mod.collect(cluster, cfg, carbon_model=carbon_model,
+                                   power_model=power_model)
+    return _run_with_telemetry(cfg, hub, carbon_model, power_model,
+                               scenario)
+
+
+def _run_with_telemetry(cfg, hub, carbon_model, power_model,
+                        scenario) -> ExperimentResult:
+    """Telemetry-on path: same simulation, plus per-phase wall-time /
+    event-loop-throughput self-profiling and post-run export. Recording
+    is pure observation, so the `ExperimentResult` scalars stay
+    bit-identical to the hub-less path (pinned in
+    tests/test_telemetry.py)."""
+    import dataclasses
+    import time
+
+    def phase(name, fn):
+        t0 = time.perf_counter()
+        out = fn()
+        dt = time.perf_counter() - t0
+        hub.set_gauge(f"phase/{name}_wall_s", dt)
+        hub.event("phase", 0.0, phase=name, wall_s=dt)
+        return out
+
+    trace = phase("trace_gen", lambda: scenario.generate(
+        rate_rps=cfg.rate_rps, duration_s=cfg.duration_s, seed=cfg.seed))
+    cluster = phase("cluster_build", lambda: Cluster(cfg, telemetry=hub))
+    phase("sim_run", lambda: cluster.run(
+        trace, cfg.duration_s, sample_period_s=cfg.sample_period_s))
+    sim_wall = hub.gauge("phase/sim_run_wall_s").value
+    hub.set_gauge("events_processed", cluster.queue.processed)
+    if sim_wall > 0:
+        hub.set_gauge("events_per_sec", cluster.queue.processed / sim_wall)
+    result = phase("collect", lambda: metrics_mod.collect(
+        cluster, cfg, carbon_model=carbon_model, power_model=power_model,
+        telemetry=hub))
+
+    summary = hub.summary()
+    export_dir = cfg.telemetry_options.get("export_dir")
+    if export_dir:
+        import os
+        from repro.telemetry import export_run
+        out_dir = os.path.join(
+            str(export_dir), f"{cfg.policy}-{cfg.fingerprint()}")
+        summary["export"] = export_run(hub, out_dir,
+                                       t_end=cfg.duration_s)
+    return dataclasses.replace(result, telemetry_summary=summary)
 
 
 def run_policy_sweep(

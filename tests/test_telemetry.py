@@ -1,0 +1,377 @@
+"""Telemetry subsystem tests: probe-layer invariants (windowed ring
+aggregates == full-history recompute), the zero-cost-off purity pin
+(telemetry-on runs are bit-identical to hub-less runs), and export
+round-trips (JSONL event stream, Chrome trace, series npz/csv,
+Prometheus text, live metrics endpoint)."""
+from __future__ import annotations
+
+import json
+import math
+import os
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.sim import ExperimentConfig, run_experiment
+from repro.telemetry import (
+    NULL_HUB,
+    EVENT_SCHEMA_VERSION,
+    TelemetryHub,
+    WindowedSeries,
+    export_run,
+    hist_bin_index,
+    hist_bin_upper,
+    prometheus_text,
+    read_jsonl,
+    series_to_csv,
+    series_to_npz,
+    start_metrics_server,
+    write_chrome_trace,
+    write_jsonl,
+)
+
+# Forces `temporal_adjustment` to actually defer wake-ups on a short
+# run: permanently dirty hour (phase=pi/2 puts the diurnal intensity
+# peak at t=0), full deferral. Used by every test that needs
+# carbon-aware cause-attribution events in the stream.
+CARBON_DEFER_OPTS = {
+    "carbon_aware": True,
+    "intensity_opts": (("phase", math.pi / 2),),
+    "dirty_frac": 1.0,
+    "defer_frac": 1.0,
+}
+
+
+def _telemetry_cfg(**kw) -> ExperimentConfig:
+    base = dict(duration_s=12.0, rate_rps=60.0, seed=0,
+                policy_opts=CARBON_DEFER_OPTS)
+    base.update(kw)
+    return ExperimentConfig(**base).with_telemetry()
+
+
+# ---------------------------------------------------------------------- #
+# probe layer
+# ---------------------------------------------------------------------- #
+class TestProbes:
+    def test_counter_gauge(self):
+        hub = TelemetryHub()
+        hub.inc("a")
+        hub.inc("a", 4)
+        assert hub.counter("a").value == 5
+        hub.set_gauge("g", 2.5)
+        assert hub.gauge("g").value == 2.5
+
+    def test_histogram_bin_edges_partition(self):
+        """Every positive float lands in exactly one bin, and bins are
+        ordered half-open intervals: upper(i-1) <= value <= upper(i)
+        (the previous bin's upper edge is this bin's lower edge)."""
+        for v in [1e-7, 1e-6, 1.0, 3.14, 999.0, 1e6, 5e8]:
+            i = hist_bin_index(v)
+            assert v <= hist_bin_upper(i) or math.isinf(hist_bin_upper(i))
+            if 0 < i:
+                assert v >= hist_bin_upper(i - 1)
+
+    def _recompute(self, obs, window_s):
+        """Full-history per-window aggregates, the slow obvious way."""
+        wins: dict[int, list[float]] = {}
+        for t, v in obs:
+            wins.setdefault(int(t / window_s), []).append(v)
+        return wins
+
+    def _check_against_recompute(self, obs, window_s, max_windows=4096):
+        s = WindowedSeries("x", window_s=window_s,
+                           max_windows=max_windows)
+        for t, v in obs:
+            s.observe(t, v)
+        full = self._recompute(obs, window_s)
+        retained = {int(round(w["t_start"] / window_s)): w
+                    for w in s.windows()}
+        # ring keeps the most recent max_windows windows
+        keep = sorted(full)[-max_windows:]
+        assert sorted(retained) == keep
+        for idx in keep:
+            vals = full[idx]
+            w = retained[idx]
+            assert w["count"] == len(vals)
+            assert w["total"] == pytest.approx(math.fsum(vals), rel=1e-9)
+            assert w["min"] == min(vals)
+            assert w["max"] == max(vals)
+        # merged histogram equals recompute over retained values only
+        kept_vals = [v for idx in keep for v in full[idx]]
+        bins = [0] * len(s.merged_bins())
+        for v in kept_vals:
+            bins[hist_bin_index(v)] += 1
+        assert s.merged_bins() == bins
+        # quantiles: the returned bucket edge bounds at least the
+        # q-th-ranked observation from above
+        n = len(kept_vals)
+        for q in (0.5, 0.9, 0.99):
+            edge = s.quantile(q)
+            below = sum(1 for v in kept_vals if v <= edge)
+            assert below > q * (n - 1) - 1e-9
+
+    def test_windowed_ring_equals_recompute_property(self):
+        """Hypothesis when available; otherwise the same property over
+        a seeded generative sweep (the container has no hypothesis
+        wheel and deps cannot be installed)."""
+        try:
+            from hypothesis import given, settings
+            from hypothesis import strategies as st
+
+            @settings(max_examples=50, deadline=None)
+            @given(st.lists(st.tuples(
+                st.floats(min_value=0.0, max_value=500.0,
+                          allow_nan=False, allow_infinity=False),
+                st.floats(min_value=1e-6, max_value=1e5,
+                          allow_nan=False, allow_infinity=False)),
+                min_size=1, max_size=300),
+                st.sampled_from([0.5, 1.0, 7.3]),
+                st.sampled_from([4, 64, 4096]))
+            def check(obs, window_s, max_windows):
+                obs.sort()          # hub observations arrive in order
+                self._check_against_recompute(obs, window_s,
+                                              max_windows)
+
+            check()
+        except ImportError:
+            rng = np.random.default_rng(7)
+            for trial in range(40):
+                n = int(rng.integers(1, 300))
+                ts = np.sort(rng.uniform(0.0, 500.0, n))
+                vs = 10.0 ** rng.uniform(-6, 5, n)
+                window_s = float(rng.choice([0.5, 1.0, 7.3]))
+                max_windows = int(rng.choice([4, 64, 4096]))
+                self._check_against_recompute(
+                    list(zip(ts.tolist(), vs.tolist())),
+                    window_s, max_windows)
+
+    def test_out_of_order_observation_policy(self):
+        """Late samples fold into a still-retained window; samples
+        older than the ring are counted as dropped, never mis-binned."""
+        s = WindowedSeries("x", window_s=1.0, max_windows=2)
+        for t in (0.5, 1.5, 2.5):
+            s.observe(t, 1.0)
+        s.observe(1.7, 5.0)          # window 1 still retained
+        assert {int(w["t_start"]) for w in s.windows()} == {1, 2}
+        w1 = next(w for w in s.windows() if int(w["t_start"]) == 1)
+        assert w1["count"] == 2 and w1["max"] == 5.0
+        before = s.dropped_observations
+        s.observe(0.1, 9.0)          # window 0 evicted -> dropped
+        assert s.dropped_observations == before + 1
+
+    def test_timeline_ring_and_stride(self):
+        hub = TelemetryHub(timeline_maxlen=3)
+        tl = hub.timeline("t")
+        for i in range(5):
+            tl.record(float(i), (float(i),))
+        assert len(tl) == 3
+        assert [t for t, _ in tl.samples()] == [2.0, 3.0, 4.0]
+        assert tl.dropped == 2
+
+    def test_event_ring_bounded(self):
+        hub = TelemetryHub(max_events=10)
+        for i in range(25):
+            hub.event("k", float(i), n=i)
+        assert len(hub.events) == 10
+        assert hub.events_dropped == 15
+        assert hub.summary()["events_dropped"] == 15
+
+    def test_null_hub_is_disabled(self):
+        assert NULL_HUB.enabled is False
+        NULL_HUB.inc("x")
+        NULL_HUB.event("k", 0.0)
+        NULL_HUB.timeline("t").record(0.0, (1.0,))
+        assert NULL_HUB.summary() == {}
+
+    def test_from_opts_filters_unknown(self):
+        hub = TelemetryHub.from_opts(
+            {"window_s": 2.0, "max_events": 9,
+             "export_dir": "/tmp/x", "unknown_key": 1})
+        assert hub.window_s == 2.0
+        assert hub.events.maxlen == 9
+
+
+# ---------------------------------------------------------------------- #
+# zero-cost-off purity
+# ---------------------------------------------------------------------- #
+class TestPurity:
+    def test_telemetry_on_is_bit_identical(self):
+        """Recording is pure observation: the same config with and
+        without telemetry must produce bit-identical scalars and
+        per-machine detail (no extra RNG draws, no aging mutation)."""
+        base = ExperimentConfig(duration_s=10.0, rate_rps=60.0, seed=3,
+                                policy_opts=CARBON_DEFER_OPTS)
+        off = run_experiment(base)
+        on = run_experiment(base.with_telemetry())
+        assert on.telemetry_summary is not None
+        assert off.telemetry_summary is None
+        d_off = off.to_dict()
+        d_on = on.to_dict()
+        for d in (d_off, d_on):
+            d.pop("provenance", None)
+            d.pop("telemetry_summary", None)
+            # config hash legitimately differs (telemetry field is in
+            # the fingerprint); everything numeric must not
+            d.pop("config_hash", None)
+        assert d_on == d_off
+
+    def test_scalars_exclude_telemetry(self):
+        """telemetry_summary holds wall-time gauges — it must never
+        leak into scalars() or every drift check would be flaky."""
+        res = run_experiment(_telemetry_cfg(duration_s=4.0))
+        assert "telemetry_summary" not in res.scalars()
+
+
+# ---------------------------------------------------------------------- #
+# exports
+# ---------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def telemetry_run():
+    """One shared default-dims run with telemetry + carbon-aware
+    deferral forced on: expensive, so module-scoped."""
+    cfg = _telemetry_cfg()
+    hub = TelemetryHub.from_opts(cfg.telemetry_options)
+    result = run_experiment(cfg, telemetry=hub)
+    return cfg, hub, result
+
+
+class TestExports:
+    def test_jsonl_roundtrip_and_required_events(self, telemetry_run,
+                                                 tmp_path):
+        cfg, hub, _ = telemetry_run
+        path = tmp_path / "events.jsonl"
+        write_jsonl(hub, str(path))
+        meta, events = read_jsonl(str(path))
+        assert meta["schema"] == EVENT_SCHEMA_VERSION
+        assert meta["events"] == len(events)
+        kinds = {e["kind"] for e in events}
+        # per-core gate/wake spans with machine+core attribution
+        assert {"gate", "wake"} <= kinds
+        gate = next(e for e in events if e["kind"] == "gate")
+        assert {"machine", "core", "cause"} <= gate.keys()
+        # >=1 carbon-aware deferral cause record (acceptance criterion)
+        defers = [e for e in events if e["kind"] == "carbon_deferral"]
+        assert defers and all(e["cause"] == "carbon-aware-deferral"
+                              and e["deferred"] >= 1 for e in defers)
+        # routing decisions carry the justifying fleet snapshot
+        route = next(e for e in events if e["kind"] == "route")
+        assert isinstance(route["depths"], list)
+        assert route["chosen"] < len(route["depths"])
+
+    def test_jsonl_schema_guard(self, tmp_path):
+        path = tmp_path / "bad.jsonl"
+        path.write_text(json.dumps(
+            {"kind": "telemetry_meta", "schema": 999}) + "\n")
+        with pytest.raises(ValueError, match="schema"):
+            read_jsonl(str(path))
+
+    def test_chrome_trace_structure(self, telemetry_run, tmp_path):
+        cfg, hub, _ = telemetry_run
+        path = tmp_path / "trace.json"
+        write_chrome_trace(hub, str(path), t_end=cfg.duration_s)
+        with open(path) as f:
+            doc = json.load(f)
+        evs = doc["traceEvents"]
+        assert evs, "trace must not be empty"
+        complete = [e for e in evs if e["ph"] == "X"]
+        instants = [e for e in evs if e["ph"] == "i"]
+        assert complete and instants
+        horizon_us = cfg.duration_s * 1e6
+        for e in complete:
+            assert e["dur"] >= 0
+            assert 0 <= e["ts"] <= horizon_us
+            assert e["ts"] + e["dur"] <= horizon_us * (1 + 1e-9)
+            assert {"pid", "tid", "name"} <= e.keys()
+        assert any(e["name"] == "gated" for e in complete)
+        assert any(e["name"] == "carbon_deferral" for e in instants)
+
+    def test_series_csv_and_npz(self, telemetry_run, tmp_path):
+        _, hub, _ = telemetry_run
+        csv_path = tmp_path / "series.csv"
+        npz_path = tmp_path / "series.npz"
+        series_to_csv(hub, str(csv_path))
+        header = csv_path.read_text().splitlines()[0]
+        assert header.split(",")[:3] == ["series", "t_start", "window_s"]
+        series_to_npz(hub, str(npz_path))
+        with np.load(str(npz_path)) as npz:
+            freq_keys = [k for k in npz.files
+                         if k.startswith("timeline/m")
+                         and k.endswith("/freq/values")]
+            assert freq_keys
+            k = freq_keys[0]
+            t = npz[k.replace("/values", "/t")]
+            assert len(t) == len(npz[k])
+            assert (np.diff(t) > 0).all()
+
+    def test_export_run_writes_all_surfaces(self, telemetry_run,
+                                            tmp_path):
+        cfg, hub, _ = telemetry_run
+        paths = export_run(hub, str(tmp_path / "out"),
+                           t_end=cfg.duration_s)
+        assert set(paths) == {"events_jsonl", "chrome_trace",
+                              "series_csv", "series_npz", "prometheus"}
+        for p in paths.values():
+            assert os.path.getsize(p) > 0
+
+    def test_prometheus_text_format(self, telemetry_run):
+        _, hub, _ = telemetry_run
+        text = prometheus_text(hub)
+        lines = text.splitlines()
+        assert any(l.startswith("# TYPE repro_") for l in lines)
+        assert any("_total" in l for l in lines
+                   if not l.startswith("#"))
+        # every histogram ends with the mandatory +Inf bucket
+        buckets = [l for l in lines if "_bucket{" in l]
+        assert buckets
+        hist_names = {l.split("_bucket{")[0] for l in buckets}
+        for hn in hist_names:
+            assert any(l.startswith(hn + '_bucket{le="+Inf"}')
+                       for l in buckets)
+        # exposition format: every sample line is `name{labels} value`
+        for l in lines:
+            if l and not l.startswith("#"):
+                name, _, value = l.rpartition(" ")
+                assert name
+                float(value)
+
+    def test_metrics_server_serves_snapshot(self, telemetry_run):
+        _, hub, _ = telemetry_run
+        server = start_metrics_server(lambda: prometheus_text(hub),
+                                      port=0)
+        try:
+            url = f"http://127.0.0.1:{server.server_port}/metrics"
+            with urllib.request.urlopen(url, timeout=5) as resp:
+                body = resp.read().decode()
+            assert "repro_" in body
+        finally:
+            server.shutdown()
+
+
+# ---------------------------------------------------------------------- #
+# result/runner integration
+# ---------------------------------------------------------------------- #
+class TestIntegration:
+    def test_summary_in_result_and_roundtrip(self, telemetry_run):
+        _, _, result = telemetry_run
+        s = result.telemetry_summary
+        assert s["events"] > 0
+        assert "carbon_deferral" in s["event_kinds"]
+        assert any(k.startswith("phase/") for k in s["gauges"])
+        back = type(result).from_dict(result.to_dict())
+        assert back.telemetry_summary == s
+
+    def test_export_dir_opt(self, tmp_path):
+        cfg = _telemetry_cfg(duration_s=4.0).with_telemetry(
+            export_dir=str(tmp_path))
+        res = run_experiment(cfg)
+        export = res.telemetry_summary["export"]
+        for p in export.values():
+            assert os.path.exists(p)
+        assert str(tmp_path) in next(iter(export.values()))
+
+    def test_config_fingerprint_tracks_telemetry(self):
+        a = ExperimentConfig()
+        b = a.with_telemetry()
+        assert a.fingerprint() != b.fingerprint()
+        assert b.telemetry and not a.telemetry
