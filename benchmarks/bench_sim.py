@@ -2,7 +2,7 @@
 canonical config, emitted to BENCH_sim.json to seed the repo's perf
 trajectory.
 
-    PYTHONPATH=src python benchmarks/bench_sim.py            # full (~1 min)
+    PYTHONPATH=src python benchmarks/bench_sim.py            # full (~3 min)
     PYTHONPATH=src python benchmarks/bench_sim.py --smoke    # CI-scale
 
 The committed BASELINE block pins the pre-optimization numbers (PR 4's
@@ -167,6 +167,65 @@ def bench_fleet_settle(n_machines: int = 22, num_cores: int = 40,
             "speedup": round(seq / batched, 2)}
 
 
+def bench_fleet_scale(smoke: bool = False) -> dict:
+    """Scale curve: event-loop reference vs the vectorized fleet engine
+    (`repro.sim.fleetsim`) at growing fleet sizes and horizons.
+
+    Machines scale with the default 5:17 prompt:token split and
+    proportional offered load, so per-machine utilization is comparable
+    across the curve. The headline row drives >= 200 machines for >= 1
+    simulated hour through the time-stepped engine — a scale where the
+    per-event loop is no longer practical (its 22-machine x 120 s wall
+    time extrapolates to ~15 min there). `machine_s_per_wall_s` is the
+    honest cross-engine throughput unit: simulated machine-seconds per
+    wall second."""
+    from repro.sim.runner import run_experiment
+
+    def scaled_cfg(n_machines: int, duration_s: float) -> ExperimentConfig:
+        n_prompt = max(1, round(n_machines * 5 / 22))
+        return ExperimentConfig(
+            n_prompt=n_prompt, n_token=n_machines - n_prompt,
+            rate_rps=round(60.0 * n_machines / 22, 3),
+            duration_s=duration_s)
+
+    if smoke:
+        event_points = [(22, 30.0)]
+        fleet_points = [("numpy", 22, 30.0), ("jax", 22, 30.0)]
+    else:
+        event_points = [(22, 120.0)]
+        fleet_points = [("numpy", 22, 120.0), ("numpy", 50, 600.0),
+                        ("numpy", 200, 3600.0), ("jax", 200, 3600.0)]
+
+    rows = []
+    for n, dur in event_points:
+        cfg = scaled_cfg(n, dur)
+        t0 = time.perf_counter()
+        res = run_experiment(cfg)
+        wall = time.perf_counter() - t0
+        rows.append({"engine": "event", "backend": "python",
+                     "n_machines": n, "duration_s": dur,
+                     "wall_s": round(wall, 4),
+                     "machine_s_per_wall_s": round(n * dur / wall, 1),
+                     "completed": res.completed})
+    for backend, n, dur in fleet_points:
+        cfg = scaled_cfg(n, dur).with_engine("fleet", backend=backend)
+        try:
+            t0 = time.perf_counter()
+            res = run_experiment(cfg)
+            wall = time.perf_counter() - t0
+        except ImportError:                  # jax absent on this host
+            rows.append({"engine": "fleet", "backend": backend,
+                         "n_machines": n, "duration_s": dur,
+                         "skipped": "backend unavailable"})
+            continue
+        rows.append({"engine": "fleet", "backend": backend,
+                     "n_machines": n, "duration_s": dur,
+                     "wall_s": round(wall, 4),
+                     "machine_s_per_wall_s": round(n * dur / wall, 1),
+                     "completed": res.completed})
+    return {"rows": rows}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
@@ -205,6 +264,7 @@ def main() -> None:
                 duration_s=8.0 if args.smoke else 20.0,
                 runs=1 if args.smoke else 2),
         },
+        "fleet_scale": bench_fleet_scale(smoke=args.smoke),
     }
     if not args.smoke:
         out["baseline"] = BASELINE

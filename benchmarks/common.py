@@ -35,6 +35,15 @@ def axes_epilog() -> str:
     lines = ["registry axes (see repro.registry):"]
     for flag, names in rows:
         lines.append(f"  {flag}: {', '.join(names)}")
+    lines.append(
+        "engines (ExperimentConfig.engine): event (per-task event loop, "
+        "bit-exact\n  reference), fleet (vectorized time-stepped "
+        "surrogate for 100s of machines x\n  hours+; see repro.sim."
+        "fleetsim). The fleet engine's jax backend — like the\n  "
+        "event engine's opt-in jax aging settler (FleetAgingSettler("
+        "backend=\"jax\"))\n  — settles aging in float32: fast, but "
+        "results are NOT bit-exact vs the\n  numpy reference; the "
+        "pinned goldens assume numpy.")
     return "\n".join(lines)
 
 

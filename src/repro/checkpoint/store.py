@@ -86,7 +86,14 @@ def restore(directory: str, template, step: int | None = None,
         if (leaf.dtype == jax.numpy.bfloat16
                 and arr.dtype == np.uint16):
             arr = arr.view(jax.numpy.bfloat16)
-        out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+        if isinstance(leaf, np.ndarray):
+            # numpy template leaf: restore as numpy, dtype preserved.
+            # Routing through jax here would silently truncate float64
+            # state to float32 (x64 is disabled by default), breaking
+            # bit-exact resume for hosts that checkpoint f64 state.
+            out.append(np.asarray(arr, dtype=leaf.dtype))
+        else:
+            out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
     return jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(template), out)
 

@@ -147,6 +147,21 @@ class CoreManager:
         ) else None
         self._tel_id = int(telemetry_id)
         self._tel_tick = 0
+        if self._tel is not None:
+            # Cache the probe objects once (the hub idiom): emissions
+            # become one bound-method call, not a name lookup per event.
+            tel, mid = self._tel, self._tel_id
+            self._c_assigns = tel.counter("assigns")
+            self._c_oversub_assigns = tel.counter("oversub_assigns")
+            self._c_promotions = tel.counter("promotions")
+            self._c_gates = tel.counter("gates")
+            self._c_wakes = tel.counter("wakes")
+            self._c_deferrals = tel.counter("carbon_deferrals")
+            self._s_active = tel.get_series(f"m{mid}/active_cores")
+            self._s_oversub = tel.get_series(f"m{mid}/oversub_tasks")
+            self._tl_freq = tel.timeline(f"m{mid}/freq")
+            self._tl_dvth = tel.timeline(f"m{mid}/dvth")
+            self._tl_cstate = tel.timeline(f"m{mid}/cstate")
 
     @staticmethod
     def _resolve_policy(policy, policy_opts) -> CorePolicy:
@@ -326,10 +341,11 @@ class CoreManager:
             self.metrics.oversub_assigns += 1
             tel = self._tel
             if tel is not None:
-                tel.inc("oversub_assigns")
-                tel.event("oversub", now, machine=self._tel_id,
-                          task=task_id, cause="oversubscription",
-                          waiting=len(self.oversub_tasks))
+                self._c_oversub_assigns.inc()
+                tel.push({"kind": "oversub", "t": now,
+                          "machine": self._tel_id, "task": task_id,
+                          "cause": "oversubscription",
+                          "waiting": len(self.oversub_tasks)})
             # Oversubscribed tasks time-share already-busy cores, so the
             # settled frequency of the fastest *busy* core bounds their
             # speed — pristine idle (or power-gated) cores are not
@@ -346,9 +362,9 @@ class CoreManager:
         self._task_speed[task_id] = speed
         tel = self._tel
         if tel is not None:
-            tel.inc("assigns")
-            tel.event("assign", now, machine=self._tel_id, core=core,
-                      task=task_id, speed=speed)
+            self._c_assigns.inc()
+            tel.push({"kind": "assign", "t": now, "machine": self._tel_id,
+                      "core": core, "task": task_id, "speed": speed})
         return speed
 
     def release(self, task_id: int, now: float) -> None:
@@ -363,8 +379,9 @@ class CoreManager:
             self._task_speed.pop(task_id, None)
             self._account_oversub(task_id, now)
             if self._tel is not None:
-                self._tel.event("release", now, machine=self._tel_id,
-                                core=-1, task=task_id)
+                self._tel.push({"kind": "release", "t": now,
+                                "machine": self._tel_id, "core": -1,
+                                "task": task_id})
             if self.oversub_tasks:
                 self._promote_oversubscribed(now)
             return
@@ -380,8 +397,9 @@ class CoreManager:
         self.idle_since[core] = now
         self._push_free(core)
         if self._tel is not None:
-            self._tel.event("release", now, machine=self._tel_id,
-                            core=core, task=task_id)
+            self._tel.push({"kind": "release", "t": now,
+                            "machine": self._tel_id, "core": core,
+                            "task": task_id})
         self.policy.on_release(self._view, core)
         if self.oversub_tasks:
             self._promote_oversubscribed(now)
@@ -416,10 +434,11 @@ class CoreManager:
                 self.params, float(self.f0[core]), float(self.dvth[core]))
             self._task_speed[task_id] = speed
             if self._tel is not None:
-                self._tel.inc("promotions")
-                self._tel.event("promote", now, machine=self._tel_id,
-                                core=core, task=task_id, speed=speed,
-                                cause="promotion")
+                self._c_promotions.inc()
+                self._tel.push({"kind": "promote", "t": now,
+                                "machine": self._tel_id, "core": core,
+                                "task": task_id, "speed": speed,
+                                "cause": "promotion"})
             if self.on_promote is not None:
                 self.on_promote(task_id, core, now, speed)
 
@@ -446,14 +465,13 @@ class CoreManager:
 
         tel = self._tel
         if tel is not None:
-            mid = self._tel_id
-            tel.observe(f"m{mid}/active_cores", now, active)
-            tel.observe(f"m{mid}/oversub_tasks", now, oversub)
+            self._s_active.observe(now, active)
+            self._s_oversub.observe(now, oversub)
             self._tel_tick += 1
             if self._tel_tick % tel.timeline_every == 0:
                 # settle_all just ran, so dvth is settled to `now`;
                 # frequency() here is a pure read of Eq. 1.
-                self._record_timelines(tel, now)
+                self._record_timelines(now)
 
         corr = self.policy.periodic(self._view)
         if corr is None:
@@ -478,23 +496,26 @@ class CoreManager:
             self.c_state[i] = CState.DEEP_IDLE
             self._stamp[i] += 1          # no longer in the free-core heap
             if tel is not None:
-                tel.inc("gates")
-                tel.event("gate", now, machine=self._tel_id, core=i,
-                          cause=cause)
+                self._c_gates.inc()
+                tel.push({"kind": "gate", "t": now,
+                          "machine": self._tel_id, "core": i,
+                          "cause": cause})
         for i in corr.to_wake:
             i = int(i)
             self.c_state[i] = CState.ACTIVE
             self.idle_since[i] = now
             self._push_free(i)
             if tel is not None:
-                tel.inc("wakes")
-                tel.event("wake", now, machine=self._tel_id, core=i,
-                          cause=cause)
+                self._c_wakes.inc()
+                tel.push({"kind": "wake", "t": now,
+                          "machine": self._tel_id, "core": i,
+                          "cause": cause})
         if tel is not None and deferred:
-            tel.inc("carbon_deferrals", deferred)
-            tel.event("carbon_deferral", now, machine=self._tel_id,
-                      deferred=deferred, oversub=oversub,
-                      cause="carbon-aware-deferral")
+            self._c_deferrals.inc(deferred)
+            tel.push({"kind": "carbon_deferral", "t": now,
+                      "machine": self._tel_id, "deferred": deferred,
+                      "oversub": oversub,
+                      "cause": "carbon-aware-deferral"})
         # settle_all already advanced the residency clock to `now`, so the
         # gated-count change takes effect from this instant. Recount from
         # c_state (not a +/- delta) so nonstandard corrections can't drift
@@ -506,16 +527,14 @@ class CoreManager:
     # ------------------------------------------------------------------ #
     # observability
     # ------------------------------------------------------------------ #
-    def _record_timelines(self, tel, now: float) -> None:
-        """Per-core aging/frequency/regime snapshot into the hub's
-        timelines (called from `periodic` after `settle_all`, so `dvth`
-        is already settled to `now`; pure reads, no mutation)."""
-        mid = self._tel_id
+    def _record_timelines(self, now: float) -> None:
+        """Per-core aging/frequency/regime snapshot into the cached
+        hub timelines (called from `periodic` after `settle_all`, so
+        `dvth` is already settled to `now`; pure reads, no mutation)."""
         freq = aging.frequency(self.params, self.f0, self.dvth)
-        tel.timeline(f"m{mid}/freq").record(now, freq)
-        tel.timeline(f"m{mid}/dvth").record(now, self.dvth)
-        tel.timeline(f"m{mid}/cstate").record(
-            now, self.c_state.astype(np.float64))
+        self._tl_freq.record(now, freq)
+        self._tl_dvth.record(now, self.dvth)
+        self._tl_cstate.record(now, self.c_state.astype(np.float64))
 
     def _frequencies_now(self, settle: bool = True) -> np.ndarray:
         if settle:

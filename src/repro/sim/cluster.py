@@ -299,6 +299,13 @@ class Cluster:
         self.router = get_router(cfg.router, **cfg.router_options)
         self.router_rng = np.random.default_rng(cfg.seed * 1000 + 999)
         self.fleet = FleetView(self)
+        if self.telemetry is not None:
+            tel = self.telemetry
+            self._c_routes = {k: tel.counter(f"routes_{k}")
+                              for k in ("prompt", "token")}
+            self._s_prompt_depth = tel.get_series("fleet/prompt_queue_depth")
+            self._s_decode_load = tel.get_series("fleet/decode_load")
+            self._s_cpu_tasks = tel.get_series("fleet/cpu_tasks")
         # Periodic ticks settle all machines' cores through one stacked
         # advance (numpy backend: bit-identical to per-machine settle_all).
         self.fleet_settler = FleetAgingSettler(
@@ -318,10 +325,11 @@ class Cluster:
             view = (self.fleet.prompt_depths() if kind == "prompt"
                     else self.fleet.token_loads())
             machine = idx if kind == "prompt" else self.cfg.n_prompt + idx
-            tel.inc(f"routes_{kind}")
-            tel.event("route", self.queue.now, machine=machine,
-                      phase=kind, chosen=idx, router=self.router.name,
-                      depths=[int(d) for d in view])
+            self._c_routes[kind].inc()
+            tel.push({"kind": "route", "t": self.queue.now,
+                      "machine": machine, "phase": kind, "chosen": idx,
+                      "router": self.router.name,
+                      "depths": [int(d) for d in view]})
         return idx
 
     def submit_request(self, req: Request) -> None:
@@ -368,15 +376,15 @@ class Cluster:
                 m.task_count_samples.append(m.running_cpu_tasks)
             if tel is not None:
                 now = self.queue.now
-                tel.observe("fleet/prompt_queue_depth", now,
-                            float(sum(len(p.queue) + p.busy
-                                      for p in self.prompt_instances)))
-                tel.observe("fleet/decode_load", now,
-                            float(sum(ti.load
-                                      for ti in self.token_instances)))
-                tel.observe("fleet/cpu_tasks", now,
-                            float(sum(m.running_cpu_tasks
-                                      for m in self.machines)))
+                self._s_prompt_depth.observe(
+                    now, float(sum(len(p.queue) + p.busy
+                                   for p in self.prompt_instances)))
+                self._s_decode_load.observe(
+                    now, float(sum(ti.load
+                                   for ti in self.token_instances)))
+                self._s_cpu_tasks.observe(
+                    now, float(sum(m.running_cpu_tasks
+                                   for m in self.machines)))
             t[0] += sample_period_s
             if t[0] <= duration_s:
                 self.queue.schedule_in(sample_period_s, sampler)

@@ -69,6 +69,13 @@ class ExperimentConfig:
     # residency-window width for temporal power x intensity integration;
     # 0.0 = auto (`max(idling_period_s, duration_s / 1024)`)
     power_window_s: float = 0.0
+    # simulation engine: "event" = per-machine event loop (bit-exact
+    # small-scale reference), "fleet" = vectorized time-stepped engine
+    # (`repro.sim.fleetsim`) for fleet-scale horizons. `engine_opts`
+    # carries FleetEngine options (dt_s, backend, checkpoint_dir,
+    # checkpoint_every_s, resume).
+    engine: str = "event"
+    engine_opts: tuple[tuple[str, Any], ...] = ()
     # streaming telemetry (repro.telemetry): False = zero-cost off.
     # `telemetry_opts` carries TelemetryHub options (window_s,
     # max_events, max_windows, timeline_every, timeline_maxlen) plus the
@@ -93,7 +100,8 @@ class ExperimentConfig:
         object.__setattr__(self, "power_model",
                            canonical_power_model_name(self.power_model))
         for field in ("policy_opts", "scenario_opts", "router_opts",
-                      "carbon_opts", "power_opts", "telemetry_opts"):
+                      "carbon_opts", "power_opts", "telemetry_opts",
+                      "engine_opts"):
             opts = getattr(self, field)
             if isinstance(opts, Mapping):
                 opts = opts.items()
@@ -106,6 +114,9 @@ class ExperimentConfig:
         if self.power_window_s < 0.0:
             raise ValueError(f"power_window_s must be >= 0, got "
                              f"{self.power_window_s}")
+        if self.engine not in ("event", "fleet"):
+            raise ValueError(f"unknown engine {self.engine!r}: expected "
+                             f"'event' or 'fleet'")
 
     @property
     def n_machines(self) -> int:
@@ -142,6 +153,11 @@ class ExperimentConfig:
         return dict(self.telemetry_opts)
 
     @property
+    def engine_options(self) -> dict[str, Any]:
+        """`engine_opts` as a plain kwargs dict."""
+        return dict(self.engine_opts)
+
+    @property
     def resolved_power_window_s(self) -> float:
         """Residency-window width with the auto default applied."""
         if self.power_window_s > 0.0:
@@ -151,9 +167,18 @@ class ExperimentConfig:
     def fingerprint(self) -> str:
         """Stable short hash of every field — the provenance key that
         says whether two `ExperimentResult`s came from the same
-        experiment. Robust to opt ordering (opts are stored sorted)."""
-        payload = json.dumps(dataclasses.asdict(self), sort_keys=True,
-                             default=repr)
+        experiment. Robust to opt ordering (opts are stored sorted).
+
+        Fields still at their defaults that postdate existing pinned
+        goldens (`engine`, `engine_opts`) are omitted from the payload,
+        so configs that don't use them keep their historical hashes —
+        a default-engine config fingerprints identically to one built
+        before the field existed."""
+        payload_dict = dataclasses.asdict(self)
+        if self.engine == "event" and not self.engine_opts:
+            del payload_dict["engine"]
+            del payload_dict["engine_opts"]
+        payload = json.dumps(payload_dict, sort_keys=True, default=repr)
         return hashlib.sha256(payload.encode()).hexdigest()[:12]
 
     def replace(self, **changes) -> "ExperimentConfig":
@@ -196,6 +221,13 @@ class ExperimentConfig:
         return dataclasses.replace(self, power_model=power_model,
                                    power_opts=tuple(sorted(
                                        power_opts.items())))
+
+    def with_engine(self, engine: str, **engine_opts) -> "ExperimentConfig":
+        """Same experiment, different simulation engine (opts reset
+        unless given; see `repro.sim.fleetsim.FleetEngine`)."""
+        return dataclasses.replace(self, engine=engine,
+                                   engine_opts=tuple(sorted(
+                                       engine_opts.items())))
 
     def with_telemetry(self, **telemetry_opts) -> "ExperimentConfig":
         """Same experiment, telemetry recording on (opts reset unless

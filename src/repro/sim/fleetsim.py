@@ -1,0 +1,913 @@
+"""Vectorized time-stepped fleet engine (`ExperimentConfig.engine="fleet"`).
+
+The event engine (`repro.sim.cluster`) is the bit-exact small-scale
+reference: every CPU task is a heap event, every core an object field.
+That tops out around tens of machines x minutes. This module is the
+second engine of the two-engine architecture: a mean-field / fluid
+surrogate that advances the whole stacked ``(n_machines, n_cores)``
+fleet state with array ops, so hundreds of machines x hours-to-weeks of
+simulated time run at interactive wall times.
+
+Model (per micro step of ``dt_s`` seconds, all quantities fluid):
+
+* **Workload** — the scenario's request trace is binned into per-step
+  arrival counts / input-token / output-token sums. Arrivals split
+  evenly across prompt instances (the fluid limit of JSQ: a
+  join-shortest-queue router keeps fluid queues balanced, so the
+  even split *is* its mean-field fixed point).
+* **Prefill** — each prompt machine carries a GPU backlog in seconds +
+  requests; it drains at 1 GPU-second/second using the event engine's
+  timing constants. Completed prefills flow (evenly, same JSQ limit) to
+  token instances.
+* **Decode** — each token machine carries a continuous batch (capped at
+  ``MAX_DECODE_BATCH``) and its remaining-token mass; the iteration
+  period is the event engine's ``start_iteration`` CPU time plus the
+  batch-dependent GPU pass, so CPU aging genuinely stretches decode.
+* **CPU** — per-request task work (the same ``TASK_DURATIONS_S``
+  constants the event engine schedules as discrete events) arrives as a
+  per-machine fluid inflow; busy cores follow Little's law
+  (work rate / settled core speed), with overflow carried as an
+  oversubscription backlog.
+* **Aging** — once per idling period the accumulated busy core-seconds
+  are settled through the exact NBTI recursion (the update composes
+  exactly under a constant ADF, so per-period advancement introduces no
+  integration error beyond regime-ordering within the period), and
+  Algorithm 2's reaction function gates most-aged / wakes least-aged
+  cores per machine via vectorized rank selection.
+
+Two backends share the same functional step:
+
+* ``backend="numpy"`` — float64, deterministic, and the reference for
+  checkpoint/resume exactness (a resumed run reproduces the
+  uninterrupted run's ``ExperimentResult`` scalars bit-for-bit).
+* ``backend="jax"`` — the step is compiled with ``jax.lax.scan`` over
+  macro periods (an inner scan covers the micro steps); the aging
+  settlement routes through ``repro.kernels.aging_update`` — the
+  Pallas kernel on TPU, its jnp oracle elsewhere. float32: fast, NOT
+  bit-exact vs numpy (documented caveat; see ``--help`` epilogs).
+
+``backend="auto"`` resolves to jax when importable, else numpy — the
+promotion of the batched aging backend from opt-in to default at scale.
+
+What the surrogate does NOT model: per-core task placement (stress
+spreads evenly over the active set, so within-machine frequency CV
+comes from process variation + gating asymmetry only), router choice
+(always the JSQ fluid limit), and sub-period event ordering. Parity vs
+the event engine on small configs is pinned with tolerances in
+``tests/test_fleetsim.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.core import aging, temperature, variation
+from repro.power.residency import StateResidency
+from repro.sim import metrics as metrics_mod
+from repro.sim.cluster import (
+    DECODE_ITER_BASE_S,
+    DECODE_ITER_PER_REQ_S,
+    IB_LINK_BW_BPS,
+    KV_BYTES_PER_TOKEN,
+    MAX_DECODE_BATCH,
+    PREFILL_BASE_S,
+    PREFILL_PER_TOKEN_S,
+)
+from repro.sim.config import ExperimentConfig
+from repro.sim.results import ExperimentResult
+from repro.sim.tasks import TASK_DURATIONS_S
+
+# ---------------------------------------------------------------------- #
+# Per-request CPU work (nominal core-seconds), assembled from the same
+# task table the event engine schedules discretely (see Machine.*).
+# ---------------------------------------------------------------------- #
+# prompt side, on arrival: submit -> submit_chain -> alloc_memory ->
+# submit_task (the serial admission chain).
+_W_PROMPT_ARRIVAL = (TASK_DURATIONS_S["submit"]
+                     + TASK_DURATIONS_S["submit_chain"]
+                     + TASK_DURATIONS_S["alloc_memory"]
+                     + TASK_DURATIONS_S["submit_task"])
+# prompt side, on prefill completion: finish_task || submit_flow.
+_W_PROMPT_FINISH = (TASK_DURATIONS_S["finish_task"]
+                    + TASK_DURATIONS_S["submit_flow"])
+# token side, on flow arrival: flow_completion -> alloc_memory.
+_W_TOKEN_ARRIVAL = (TASK_DURATIONS_S["flow_completion"]
+                    + TASK_DURATIONS_S["alloc_memory"])
+# token side, per decode iteration (serial with the GPU pass).
+_W_TOKEN_ITER = TASK_DURATIONS_S["start_iteration"]
+# token side, on request completion: free_memory + finish_request
+# (after t_done — not on the latency critical path, but CPU load).
+_W_TOKEN_FINISH = (TASK_DURATIONS_S["free_memory"]
+                   + TASK_DURATIONS_S["finish_request"])
+# serial CPU latency before prefill admission (excludes submit_task,
+# which is folded into the prefill service time like the event loop).
+_LAT_CPU_PROMPT = (TASK_DURATIONS_S["submit"]
+                   + TASK_DURATIONS_S["submit_chain"]
+                   + TASK_DURATIONS_S["alloc_memory"])
+_MEAN_TASK_S = float(np.mean(list(TASK_DURATIONS_S.values())))
+_KV_S_PER_TOKEN = KV_BYTES_PER_TOKEN / IB_LINK_BW_BPS
+
+_IDLE_BINS = 512          # linear histogram over [-1, 1] for idle_norm
+_EPS = 1e-12
+
+
+def _resolve_backend(requested: str) -> str:
+    """'auto' promotes the batched jax aging path when available."""
+    if requested == "numpy":
+        return "numpy"
+    if requested == "jax":
+        import jax  # noqa: F401  (raises if genuinely unavailable)
+        return "jax"
+    if requested == "auto":
+        try:
+            import jax  # noqa: F401
+            return "jax"
+        except Exception:
+            return "numpy"
+    raise ValueError(f"unknown fleet backend {requested!r}: expected "
+                     f"'numpy', 'jax' or 'auto'")
+
+
+@dataclasses.dataclass
+class _Shape:
+    """Static geometry + timing constants of one fleet run."""
+    n_prompt: int
+    n_token: int
+    num_cores: int
+    dt_s: float
+    steps_per_period: int     # micro steps per idling period
+    n_macro: int              # macro (idling-period) steps
+    mwin_s: float             # metrics-window width
+    n_mwin: int
+    pwin_s: float             # residency-window width
+    n_pwin: int
+    duration_s: float
+    mean_out_tokens: float    # trace-wide mean output tokens/request
+    gating: bool              # policy gates cores (Algorithm 2)?
+
+    @property
+    def n_machines(self) -> int:
+        return self.n_prompt + self.n_token
+
+
+def _initial_state(shape: _Shape) -> dict[str, np.ndarray]:
+    """Stacked fleet state; every mutable quantity of a run lives here
+    (and therefore checkpoints/restores as one array dict)."""
+    M, N = shape.n_machines, shape.num_cores
+    P, K = shape.n_prompt, shape.n_token
+    W, PW = shape.n_mwin, shape.n_pwin
+    return {
+        "macro": np.zeros((), dtype=np.int64),       # completed macro steps
+        "dvth": np.zeros((M, N)),
+        "gated": np.zeros((M, N), dtype=bool),
+        # fluid queues
+        "pq_s": np.zeros(P), "pq_n": np.zeros(P), "pq_out": np.zeros(P),
+        "d_batch": np.zeros(K), "d_tokens": np.zeros(K),
+        "d_pend": np.zeros(K), "d_pend_tok": np.zeros(K),
+        "cpu_backlog": np.zeros(M),
+        "busy_s": np.zeros((M, N)),     # busy core-seconds since settle
+        "u_last": np.zeros(M), "ov_last": np.zeros(M),
+        # metrics windows (streaming aggregates — bounded for any horizon)
+        "mw_cnt": np.zeros(W), "mw_wait": np.zeros(W),
+        "mw_iter": np.zeros(W), "mw_cpuw": np.zeros(W),
+        "mw_sp": np.zeros(W), "mw_st": np.zeros(W),
+        "mw_comps": np.zeros(W),
+        # residency windows (per machine, for the power models)
+        "res_busy": np.zeros((M, PW)), "res_idle": np.zeros((M, PW)),
+        "res_gated": np.zeros((M, PW)), "res_fbusy": np.zeros((M, PW)),
+        # sample statistics
+        "idle_hist": np.zeros(_IDLE_BINS, dtype=np.int64),
+        "task_sum": np.zeros(()), "task_cnt": np.zeros(()),
+        "task_max": np.zeros(()),
+        "completions": np.zeros(()),
+    }
+
+
+# ---------------------------------------------------------------------- #
+# Functional fleet step — written once against an array namespace `xp`
+# (numpy or jax.numpy) so both backends run the same physics.
+# ---------------------------------------------------------------------- #
+def _micro_step(xp, shape: _Shape, dyn, q, arr_row):
+    """One fluid micro step. `dyn` = per-period derived state
+    (sp, st, sm, active counts); `q` = queue-state tuple; `arr_row` =
+    (arrivals, input-token sum, output-token sum) for this step.
+    Returns (q', observables)."""
+    (pq_s, pq_n, pq_out, d_batch, d_tokens, d_pend, d_pend_tok,
+     cpu_backlog) = q
+    sp, st, sm, active = dyn          # (P,), (K,), (M,), (M,)
+    P, K = shape.n_prompt, shape.n_token
+    dt = shape.dt_s
+    a, in_sum, out_sum = arr_row
+
+    # Prefill wait seen by an arrival this step: GPU backlog ahead of it
+    # (sampled before the arrival joins), fleet-mean across prompt
+    # instances (even JSQ-limit split).
+    wait_p = xp.mean(pq_s)
+
+    # 1) arrivals -> prompt queues (even split) + prompt CPU work
+    pq_n = pq_n + a / P
+    pq_s = pq_s + (a * PREFILL_BASE_S + PREFILL_PER_TOKEN_S * in_sum
+                   + a * TASK_DURATIONS_S["submit_task"] / sp) / P
+    pq_out = pq_out + out_sum / P
+    work_p = (a / P) * _W_PROMPT_ARRIVAL
+
+    # 2) prefill drain (1 GPU-second per second)
+    ds = xp.minimum(pq_s, dt)
+    frac = ds / xp.maximum(pq_s, _EPS)
+    done_n = pq_n * frac
+    done_out = pq_out * frac
+    pq_s = pq_s - ds
+    pq_n = pq_n - done_n
+    pq_out = pq_out - done_out
+    work_p = work_p + done_n * _W_PROMPT_FINISH
+    c_total = xp.sum(done_n)
+    o_total = xp.sum(done_out)
+
+    # 3) flow to token instances (even split) + decode admission
+    d_pend = d_pend + c_total / K
+    d_pend_tok = d_pend_tok + o_total / K
+    work_t = (c_total / K) * _W_TOKEN_ARRIVAL
+    room = xp.maximum(MAX_DECODE_BATCH - d_batch, 0.0)
+    adm = xp.minimum(d_pend, room)
+    tok_per_pend = d_pend_tok / xp.maximum(d_pend, _EPS)
+    d_batch = d_batch + adm
+    d_tokens = d_tokens + adm * tok_per_pend
+    d_pend = d_pend - adm
+    d_pend_tok = d_pend_tok - adm * tok_per_pend
+
+    # 4) decode iterations: CPU start_iteration is serial with the GPU
+    # pass, so aged (slower) CPUs stretch the iteration period — the
+    # paper's aging -> service-quality coupling.
+    iter_period = (_W_TOKEN_ITER / st + DECODE_ITER_BASE_S
+                   + DECODE_ITER_PER_REQ_S
+                   * xp.minimum(d_batch, MAX_DECODE_BATCH))
+    busy_gpu = d_batch > _EPS
+    iters = xp.where(busy_gpu, dt / iter_period, 0.0)
+    tokens_out = xp.minimum(iters * d_batch, d_tokens)
+    # completion rate = batch x token-rate / remaining mass (fluid drain
+    # of the residual-token distribution; integrates to the full batch).
+    comps = xp.minimum(
+        d_batch * tokens_out / xp.maximum(d_tokens, _EPS), d_batch)
+    d_tokens = xp.maximum(d_tokens - tokens_out, 0.0)
+    drained = d_tokens <= _EPS
+    comps = xp.where(drained, d_batch, comps)
+    d_batch = xp.where(drained, 0.0, xp.maximum(d_batch - comps, 0.0))
+    work_t = work_t + _W_TOKEN_ITER * iters + comps * _W_TOKEN_FINISH
+    comps_total = xp.sum(comps)
+
+    # 5) CPU layer (Little's law): nominal work executes at the settled
+    # mean core speed; overflow carries as oversubscription backlog.
+    work = xp.concatenate([work_p, work_t])
+    todo = cpu_backlog + work
+    cap = active * dt * sm
+    done = xp.minimum(todo, cap)
+    cpu_backlog = todo - done
+    u = done / (dt * sm)                       # busy cores (fractional)
+    ov = cpu_backlog / _MEAN_TASK_S            # oversubscribed tasks
+    cpu_wait = xp.mean(cpu_backlog / xp.maximum(active * sm, _EPS))
+
+    q2 = (pq_s, pq_n, pq_out, d_batch, d_tokens, d_pend, d_pend_tok,
+          cpu_backlog)
+    obs = {
+        "u": u, "ov": ov, "done": done,
+        "wait_p": wait_p,
+        "iter_mean": xp.mean(iter_period),
+        "cpu_wait": cpu_wait,
+        "comps": comps_total,
+        "sp_mean": xp.mean(sp), "st_mean": xp.mean(st),
+    }
+    return q2, obs
+
+
+def _settle_aging(shape: _Shape, dvth, gated, busy_s, advance):
+    """Settle one idling period of aging: every non-gated core spends
+    its accumulated busy core-seconds at active-allocated stress and the
+    remainder of the period at active-unallocated stress; gated cores
+    are frozen (ADF = 0). Exact per regime — the NBTI recursion composes
+    under a constant ADF."""
+    period = shape.steps_per_period * shape.dt_s
+    tau_busy = np.minimum(busy_s, period) if isinstance(busy_s, np.ndarray) \
+        else busy_s
+    tau_idle = period - tau_busy
+    dvth = advance(dvth, gated, tau_busy,
+                   temperature.TEMP_ACTIVE_ALLOCATED_C)
+    dvth = advance(dvth, gated, tau_idle,
+                   temperature.TEMP_ACTIVE_UNALLOCATED_C)
+    return dvth
+
+
+def _gate_correction(xp, shape: _Shape, active_n, u, ov, g_now, carbon):
+    """Vectorized Algorithm 2 reaction (`idling.core_correction`), with
+    the optional carbon-aware temporal reshaping."""
+    N = shape.num_cores
+    tasks = xp.minimum(float(N), u + ov)
+    e = (active_n - tasks) / N
+    f = xp.where(e >= 0.0, xp.tan(0.785 * e), xp.arctan(1.55 * e))
+    corr = xp.trunc(N * f)
+    if carbon is not None:
+        g_mean, dirty_frac, defer_frac, guard, gain = carbon
+        dirty = g_now > dirty_frac * g_mean
+        amplified = xp.trunc(corr * gain)
+        deferred = corr + xp.trunc(-corr * defer_frac)
+        corr = xp.where(
+            dirty & (corr > 0), amplified,
+            xp.where(dirty & (corr < 0) & (ov <= guard), deferred, corr))
+    return corr
+
+
+def _apply_gating(xp, corr, gated, busy_n, dvth):
+    """Vectorized `idling.apply_correction`: gate `corr` most-aged
+    spare active cores (+) or wake `-corr` least-aged gated cores (-)
+    per machine, by rank selection along the core axis."""
+    n = dvth.shape[1]
+    active = ~gated
+    eligible = xp.sum(active, axis=1) - busy_n
+    k_gate = xp.clip(corr, 0.0, xp.maximum(eligible, 0.0))
+    key = xp.where(active, dvth, -np.inf)
+    rank_g = xp.argsort(xp.argsort(-key, axis=1), axis=1)
+    gate_new = rank_g < k_gate[:, None]
+    k_wake = xp.clip(-corr, 0.0, xp.sum(gated, axis=1))
+    keyw = xp.where(gated, dvth, np.inf)
+    rank_w = xp.argsort(xp.argsort(keyw, axis=1), axis=1)
+    wake = rank_w < k_wake[:, None]
+    del n
+    return (gated | gate_new) & ~wake
+
+
+def _derived(xp, shape: _Shape, f0, dvth, gated, headroom):
+    """Per-period derived quantities: settled per-core speeds and the
+    per-machine active-core mean speed used by the fluid layers."""
+    f = f0 * (1.0 - dvth / headroom)
+    active = ~gated
+    active_n = xp.sum(active, axis=1)
+    sm = xp.sum(xp.where(active, f, 0.0), axis=1) / xp.maximum(
+        active_n, 1.0)
+    sp = sm[:shape.n_prompt]
+    st = sm[shape.n_prompt:]
+    return f, sp, st, sm, active_n
+
+
+# ---------------------------------------------------------------------- #
+# Engine
+# ---------------------------------------------------------------------- #
+class FleetEngine:
+    """Time-stepped vectorized fleet simulator (see module docstring).
+
+    ``engine_opts`` (via ``ExperimentConfig.engine_opts``):
+
+    * ``dt_s`` (default 0.25) — fluid micro-step width, seconds.
+    * ``backend`` — "numpy" | "jax" | "auto" (default "auto").
+    * ``use_kernel`` — route the jax aging settle through the Pallas
+      kernel (default: only on TPU; the jnp oracle elsewhere).
+    * ``checkpoint_dir`` — directory for periodic fleet checkpoints
+      (written through ``repro.checkpoint.store``).
+    * ``checkpoint_every_s`` (default 600) — simulated seconds between
+      checkpoints.
+    * ``resume`` (default True) — resume from the latest checkpoint in
+      ``checkpoint_dir`` whose config fingerprint matches.
+    """
+
+    def __init__(self, cfg: ExperimentConfig, telemetry=None):
+        opts = cfg.engine_options
+        unknown = set(opts) - {"dt_s", "backend", "use_kernel",
+                               "checkpoint_dir", "checkpoint_every_s",
+                               "resume"}
+        if unknown:
+            raise ValueError(f"unknown engine_opts {sorted(unknown)}")
+        self.cfg = cfg
+        self.telemetry = telemetry
+        self.backend = _resolve_backend(str(opts.get("backend", "auto")))
+        self.checkpoint_dir = opts.get("checkpoint_dir")
+        self.checkpoint_every_s = float(opts.get("checkpoint_every_s",
+                                                 600.0))
+        self.resume = bool(opts.get("resume", True))
+        self._use_kernel = opts.get("use_kernel")
+
+        dt = float(opts.get("dt_s", 0.25))
+        if dt <= 0:
+            raise ValueError(f"dt_s must be > 0, got {dt}")
+        dt = min(dt, cfg.idling_period_s)
+        spp = max(1, round(cfg.idling_period_s / dt))
+        dt = cfg.idling_period_s / spp          # align to the period
+        n_macro = max(1, int(round(cfg.duration_s / cfg.idling_period_s)))
+        mwin = max(dt, cfg.duration_s / 512.0)
+        pwin = cfg.resolved_power_window_s
+        self.params = aging.DEFAULT_PARAMS
+        self.shape = _Shape(
+            n_prompt=cfg.n_prompt, n_token=cfg.n_token,
+            num_cores=cfg.num_cores, dt_s=dt, steps_per_period=spp,
+            n_macro=n_macro,
+            mwin_s=mwin, n_mwin=int(np.ceil(cfg.duration_s / mwin)) + 1,
+            pwin_s=pwin, n_pwin=int(np.ceil(cfg.duration_s / pwin)) + 1,
+            duration_s=cfg.duration_s,
+            mean_out_tokens=0.0,        # set from the trace in run()
+            gating=cfg.policy == "proposed",
+        )
+        # Same per-machine initial-frequency draw as the event engine's
+        # CoreManager (seeded rng per machine), so both engines simulate
+        # literally the same silicon.
+        vp = variation.VariationParams(f_nominal=self.params.f_nominal)
+        self.f0 = np.stack([
+            variation.sample_initial_frequencies(
+                vp, cfg.num_cores,
+                np.random.default_rng(cfg.seed * 1000 + i))
+            for i in range(self.shape.n_machines)])
+        self._carbon_gate = self._resolve_carbon_gate(cfg)
+        self.state = _initial_state(self.shape)
+        self.resumed_from: int | None = None
+
+    @staticmethod
+    def _resolve_carbon_gate(cfg: ExperimentConfig):
+        """(intensity_fn, params) for carbon-aware proposed configs."""
+        popts = cfg.policy_options
+        if cfg.policy != "proposed" or not popts.get("carbon_aware"):
+            return None
+        from repro.carbon.intensity import get_intensity
+        intensity = get_intensity(popts.get("intensity", "diurnal"),
+                                  **dict(popts.get("intensity_opts") or {}))
+        return (intensity,
+                (intensity.mean_g_per_kwh(),
+                 float(popts.get("dirty_frac", 1.05)),
+                 float(popts.get("defer_frac", 0.5)),
+                 float(popts.get("guard_tasks", 2)),
+                 float(popts.get("gate_gain", 2.0))))
+
+    # ------------------------------------------------------------------ #
+    # trace binning
+    # ------------------------------------------------------------------ #
+    def _bin_trace(self, requests) -> np.ndarray:
+        """(T_micro, 3) per-step [arrival count, input-token sum,
+        output-token sum] from the scenario's request trace."""
+        sh = self.shape
+        n_steps = sh.n_macro * sh.steps_per_period
+        out = np.zeros((n_steps, 3))
+        if not requests:
+            return out
+        t_arr = np.fromiter((r.arrival_s for r in requests), float,
+                            count=len(requests))
+        n_in = np.fromiter((r.input_tokens for r in requests), float,
+                           count=len(requests))
+        n_out = np.fromiter((r.output_tokens for r in requests), float,
+                            count=len(requests))
+        idx = np.clip((t_arr / sh.dt_s).astype(np.int64), 0, n_steps - 1)
+        out[:, 0] = np.bincount(idx, minlength=n_steps)
+        out[:, 1] = np.bincount(idx, weights=n_in, minlength=n_steps)
+        out[:, 2] = np.bincount(idx, weights=n_out, minlength=n_steps)
+        return out
+
+    # ------------------------------------------------------------------ #
+    # run
+    # ------------------------------------------------------------------ #
+    def run(self, requests) -> None:
+        sh = self.shape
+        sh.mean_out_tokens = (float(np.mean([r.output_tokens
+                                             for r in requests]))
+                              if requests else 1.0)
+        arr = self._bin_trace(requests)
+        self._requests = requests
+        start = 0
+        if self.checkpoint_dir and self.resume:
+            start = self._try_resume()
+        if self.backend == "jax":
+            self._run_jax(arr, start)
+        else:
+            self._run_numpy(arr, start)
+
+    # -- checkpoint/resume --------------------------------------------- #
+    def _checkpoint(self, macro: int) -> None:
+        from repro.checkpoint import store
+        state = {k: np.asarray(v) for k, v in self.state.items()}
+        state["macro"] = np.asarray(macro, dtype=np.int64)
+        store.save(self.checkpoint_dir, macro, state,
+                   extra={"config": self.cfg.fingerprint(),
+                          "engine": "fleet", "backend": self.backend,
+                          "macro": macro})
+
+    def _try_resume(self) -> int:
+        from repro.checkpoint import store
+        step = store.latest_step(self.checkpoint_dir)
+        if step is None:
+            return 0
+        meta = store.meta(self.checkpoint_dir, step)
+        if meta.get("config") != self.cfg.fingerprint():
+            raise ValueError(
+                f"checkpoint at {self.checkpoint_dir!r} step {step} was "
+                f"written by config {meta.get('config')!r}, not "
+                f"{self.cfg.fingerprint()!r}: refusing to resume a "
+                f"different experiment")
+        template = {k: np.asarray(v) for k, v in self.state.items()}
+        restored = store.restore(self.checkpoint_dir, template, step=step)
+        # copy: restored arrays can be read-only views of the npz buffer
+        self.state = {k: np.array(v) for k, v in restored.items()}
+        self.resumed_from = int(step)
+        return int(self.state["macro"])
+
+    # -- numpy driver --------------------------------------------------- #
+    def _advance_numpy(self, dvth, gated, tau, temp_c):
+        a = aging.adf(self.params, temp_c, 1.0)
+        tau = np.where(gated, 0.0, np.broadcast_to(tau, dvth.shape))
+        return aging.advance_dvth(self.params, dvth, a, tau)
+
+    def _run_numpy(self, arr: np.ndarray, start_macro: int) -> None:
+        sh, st = self.shape, self.state
+        xp = np
+        P = sh.n_prompt
+        spp = sh.steps_per_period
+        next_ckpt = self._next_ckpt(start_macro)
+        g_fn = self._carbon_gate[0].g_per_kwh if self._carbon_gate else None
+        for k in range(start_macro, sh.n_macro):
+            f, sp, spd_t, sm, active_n = _derived(
+                xp, sh, self.f0, st["dvth"], st["gated"],
+                self.params.headroom)
+            dyn = (sp, spd_t, sm, active_n)
+            q = (st["pq_s"], st["pq_n"], st["pq_out"], st["d_batch"],
+                 st["d_tokens"], st["d_pend"], st["d_pend_tok"],
+                 st["cpu_backlog"])
+            for j in range(spp):
+                step = k * spp + j
+                t = step * sh.dt_s
+                q, obs = _micro_step(xp, sh, dyn, q, arr[step])
+                u, ov, done = obs["u"], obs["ov"], obs["done"]
+                # streaming window aggregates (in place: bounded memory)
+                w = min(int(t / sh.mwin_s), sh.n_mwin - 1)
+                st["mw_cnt"][w] += 1.0
+                st["mw_wait"][w] += obs["wait_p"]
+                st["mw_iter"][w] += obs["iter_mean"]
+                st["mw_cpuw"][w] += obs["cpu_wait"]
+                st["mw_sp"][w] += obs["sp_mean"]
+                st["mw_st"][w] += obs["st_mean"]
+                st["mw_comps"][w] += obs["comps"]
+                pw = min(int(t / sh.pwin_s), sh.n_pwin - 1)
+                busy_cs = done / sm
+                st["res_busy"][:, pw] += busy_cs
+                st["res_idle"][:, pw] += active_n * sh.dt_s - busy_cs
+                st["res_gated"][:, pw] += (sh.num_cores
+                                           - active_n) * sh.dt_s
+                st["res_fbusy"][:, pw] += done
+                tasks = u + ov
+                st["task_sum"] += tasks.sum()
+                st["task_cnt"] += tasks.size
+                st["task_max"] = np.maximum(st["task_max"], tasks.max())
+                st["completions"] += obs["comps"]
+                # spread busy time evenly over this period's active set
+                st["busy_s"] += np.where(
+                    st["gated"], 0.0,
+                    (busy_cs / np.maximum(active_n, 1.0))[:, None])
+            (st["pq_s"], st["pq_n"], st["pq_out"], st["d_batch"],
+             st["d_tokens"], st["d_pend"], st["d_pend_tok"],
+             st["cpu_backlog"]) = q
+            st["u_last"], st["ov_last"] = u, ov
+
+            # macro boundary: settle aging, sample, gate (same order as
+            # the event engine's periodic tick).
+            st["dvth"] = _settle_aging(sh, st["dvth"], st["gated"],
+                                       st["busy_s"], self._advance_numpy)
+            st["busy_s"][:] = 0.0
+            idle_norm = (active_n - u - ov) / sh.num_cores
+            bins = np.clip(((idle_norm + 1.0) * 0.5
+                            * (_IDLE_BINS - 1)).astype(np.int64),
+                           0, _IDLE_BINS - 1)
+            st["idle_hist"] += np.bincount(bins, minlength=_IDLE_BINS)
+            if sh.gating:
+                t_now = (k + 1) * spp * sh.dt_s
+                g_now = g_fn(t_now) if g_fn else 0.0
+                carbon = self._carbon_gate[1] if self._carbon_gate else None
+                corr = _gate_correction(xp, sh, active_n, u, ov, g_now,
+                                        carbon)
+                st["gated"] = _apply_gating(xp, corr, st["gated"],
+                                            np.ceil(np.minimum(u,
+                                                               active_n)),
+                                            st["dvth"])
+            st["macro"] = np.asarray(k + 1, dtype=np.int64)
+            if self.checkpoint_dir and k + 1 >= next_ckpt \
+                    and k + 1 < sh.n_macro:
+                self._checkpoint(k + 1)
+                next_ckpt = self._next_ckpt(k + 1)
+        del P
+
+    def _next_ckpt(self, macro: int) -> int:
+        per = max(1, int(round(self.checkpoint_every_s
+                               / self.cfg.idling_period_s)))
+        return (macro // per + 1) * per
+
+    # -- jax driver ----------------------------------------------------- #
+    def _run_jax(self, arr: np.ndarray, start_macro: int) -> None:
+        import jax
+        import jax.numpy as jnp
+        from repro.kernels.aging_update.ops import advance_fleet
+
+        sh = self.shape
+        params = self.params
+        use_kernel = (self._use_kernel if self._use_kernel is not None
+                      else jax.default_backend() == "tpu")
+        f0 = jnp.asarray(self.f0, jnp.float32)
+        spp = sh.steps_per_period
+        carbon = self._carbon_gate[1] if self._carbon_gate else None
+        if self._carbon_gate:
+            t_macro = (np.arange(sh.n_macro) + 1) * spp * sh.dt_s
+            g_arr = np.array([self._carbon_gate[0].g_per_kwh(t)
+                              for t in t_macro], dtype=np.float32)
+        else:
+            g_arr = np.zeros(sh.n_macro, dtype=np.float32)
+
+        def advance(dvth, gated, tau, temp_c):
+            flat = dvth.reshape(-1)
+            stress = jnp.where(gated, 0.0, 1.0).reshape(-1)
+            tau_f = jnp.broadcast_to(tau, dvth.shape).reshape(-1)
+            temp = jnp.full_like(flat, temp_c)
+            out = advance_fleet(flat, temp, stress, tau_f, params,
+                                use_kernel=use_kernel)
+            return out.reshape(dvth.shape)
+
+        def micro_body(carry, xs):
+            q, acc, dyn, gated = carry
+            arr_row, t = xs
+            q, obs = _micro_step(jnp, sh, dyn, q, arr_row)
+            sp, st_, sm, active_n = dyn
+            u, ov, done = obs["u"], obs["ov"], obs["done"]
+            w = jnp.minimum((t / sh.mwin_s).astype(jnp.int32),
+                            sh.n_mwin - 1)
+            pw = jnp.minimum((t / sh.pwin_s).astype(jnp.int32),
+                             sh.n_pwin - 1)
+            busy_cs = done / sm
+            tasks = u + ov
+            acc = dict(acc)
+            acc["mw"] = acc["mw"].at[:, w].add(jnp.stack([
+                1.0, obs["wait_p"], obs["iter_mean"], obs["cpu_wait"],
+                obs["sp_mean"], obs["st_mean"], obs["comps"]]))
+            acc["res"] = acc["res"].at[:, :, pw].add(jnp.stack([
+                busy_cs, active_n * sh.dt_s - busy_cs,
+                (sh.num_cores - active_n) * sh.dt_s, done], axis=0))
+            acc["task_sum"] = acc["task_sum"] + tasks.sum()
+            acc["task_cnt"] = acc["task_cnt"] + tasks.size
+            acc["task_max"] = jnp.maximum(acc["task_max"], tasks.max())
+            acc["completions"] = acc["completions"] + obs["comps"]
+            acc["busy_s"] = acc["busy_s"] + jnp.where(
+                gated, 0.0, (busy_cs / jnp.maximum(active_n, 1.0))[:, None])
+            return (q, acc, dyn, gated), (u, ov)
+
+        def macro_body(carry, xs):
+            st = carry
+            arr_rows, ts, g_now = xs
+            f = f0 * (1.0 - st["dvth"] / params.headroom)
+            active = ~st["gated"]
+            active_n = jnp.sum(active, axis=1).astype(jnp.float32)
+            sm = (jnp.sum(jnp.where(active, f, 0.0), axis=1)
+                  / jnp.maximum(active_n, 1.0))
+            dyn = (sm[:sh.n_prompt], sm[sh.n_prompt:], sm, active_n)
+            q = (st["pq_s"], st["pq_n"], st["pq_out"], st["d_batch"],
+                 st["d_tokens"], st["d_pend"], st["d_pend_tok"],
+                 st["cpu_backlog"])
+            acc = {k2: st[k2] for k2 in
+                   ("mw", "res", "task_sum", "task_cnt", "task_max",
+                    "completions", "busy_s")}
+            (q, acc, _, _), (us, ovs) = jax.lax.scan(
+                micro_body, (q, acc, dyn, st["gated"]), (arr_rows, ts))
+            u, ov = us[-1], ovs[-1]
+            dvth = _settle_aging(sh, st["dvth"], st["gated"],
+                                 acc["busy_s"], advance)
+            idle_norm = (active_n - u - ov) / sh.num_cores
+            bins = jnp.clip(((idle_norm + 1.0) * 0.5
+                             * (_IDLE_BINS - 1)).astype(jnp.int32),
+                            0, _IDLE_BINS - 1)
+            idle_hist = st["idle_hist"].at[bins].add(1)
+            gated = st["gated"]
+            if sh.gating:
+                corr = _gate_correction(jnp, sh, active_n, u, ov, g_now,
+                                        carbon)
+                gated = _apply_gating(
+                    jnp, corr, gated,
+                    jnp.ceil(jnp.minimum(u, active_n)), dvth)
+            st = dict(st)
+            st.update(acc)
+            (st["pq_s"], st["pq_n"], st["pq_out"], st["d_batch"],
+             st["d_tokens"], st["d_pend"], st["d_pend_tok"],
+             st["cpu_backlog"]) = q
+            st["busy_s"] = jnp.zeros_like(acc["busy_s"])
+            st["dvth"] = dvth
+            st["gated"] = gated
+            st["idle_hist"] = idle_hist
+            st["u_last"], st["ov_last"] = u, ov
+            return st, None
+
+        # pack numpy state -> f32 jax pytree (mw/res stacked for cheap
+        # scatter adds inside the scan)
+        s = self.state
+        jst = {k: jnp.asarray(v, jnp.float32)
+               for k, v in s.items()
+               if k not in ("macro", "idle_hist", "gated", "mw_cnt",
+                            "mw_wait", "mw_iter", "mw_cpuw", "mw_sp",
+                            "mw_st", "mw_comps", "res_busy", "res_idle",
+                            "res_gated", "res_fbusy")}
+        jst["gated"] = jnp.asarray(s["gated"])
+        jst["idle_hist"] = jnp.asarray(s["idle_hist"], jnp.int32)
+        jst["mw"] = jnp.asarray(np.stack([
+            s["mw_cnt"], s["mw_wait"], s["mw_iter"], s["mw_cpuw"],
+            s["mw_sp"], s["mw_st"], s["mw_comps"]]), jnp.float32)
+        jst["res"] = jnp.asarray(np.stack([
+            s["res_busy"], s["res_idle"], s["res_gated"],
+            s["res_fbusy"]]), jnp.float32)
+
+        n_steps = sh.n_macro * spp
+        ts = (np.arange(n_steps) * sh.dt_s).astype(np.float32)
+        arr_m = jnp.asarray(arr.reshape(sh.n_macro, spp, 3), jnp.float32)
+        ts_m = jnp.asarray(ts.reshape(sh.n_macro, spp))
+        g_m = jnp.asarray(g_arr)
+
+        scan = jax.jit(lambda st0, xs: jax.lax.scan(macro_body, st0, xs))
+        per = max(1, int(round(self.checkpoint_every_s
+                               / self.cfg.idling_period_s)))
+        k = start_macro
+        while k < sh.n_macro:
+            k2 = min(k + per, sh.n_macro) if self.checkpoint_dir \
+                else sh.n_macro
+            jst, _ = scan(jst, (arr_m[k:k2], ts_m[k:k2], g_m[k:k2]))
+            k = k2
+            self._unpack_jax(jst, k)
+            if self.checkpoint_dir and k < sh.n_macro:
+                self._checkpoint(k)
+
+    def _unpack_jax(self, jst, macro: int) -> None:
+        s = self.state
+        for key in ("dvth", "pq_s", "pq_n", "pq_out", "d_batch",
+                    "d_tokens", "d_pend", "d_pend_tok", "cpu_backlog",
+                    "busy_s", "u_last", "ov_last", "task_sum",
+                    "task_cnt", "task_max", "completions"):
+            s[key] = np.asarray(jst[key], dtype=np.float64)
+        s["gated"] = np.asarray(jst["gated"])
+        s["idle_hist"] = np.asarray(jst["idle_hist"], dtype=np.int64)
+        mw = np.asarray(jst["mw"], dtype=np.float64)
+        (s["mw_cnt"], s["mw_wait"], s["mw_iter"], s["mw_cpuw"],
+         s["mw_sp"], s["mw_st"], s["mw_comps"]) = mw
+        res = np.asarray(jst["res"], dtype=np.float64)
+        (s["res_busy"], s["res_idle"], s["res_gated"],
+         s["res_fbusy"]) = res
+        s["macro"] = np.asarray(macro, dtype=np.int64)
+
+    # ------------------------------------------------------------------ #
+    # collection
+    # ------------------------------------------------------------------ #
+    def _window_means(self):
+        st = self.state
+        cnt = np.maximum(st["mw_cnt"], 1.0)
+        means = {k: st[k] / cnt
+                 for k in ("mw_wait", "mw_iter", "mw_cpuw", "mw_sp",
+                           "mw_st")}
+        # empty windows fall back to the run-wide mean
+        have = st["mw_cnt"] > 0
+        for k, v in means.items():
+            overall = float(v[have].mean()) if have.any() else \
+                (1.0 if k in ("mw_sp", "mw_st") else 0.0)
+            means[k] = np.where(have, v, overall)
+        return means
+
+    def _latency_postpass(self):
+        """Per-request latency estimates from the windowed aggregates —
+        a transient vectorized pass over the trace (no per-request state
+        is held by the engine)."""
+        sh = self.shape
+        requests = self._requests
+        if not requests:
+            return float("nan"), float("nan"), 0
+        mw = self._window_means()
+        t_arr = np.fromiter((r.arrival_s for r in requests), float,
+                            count=len(requests))
+        n_in = np.fromiter((r.input_tokens for r in requests), float,
+                           count=len(requests))
+        n_out = np.fromiter((r.output_tokens for r in requests), float,
+                            count=len(requests))
+        w = np.clip((t_arr / sh.mwin_s).astype(np.int64), 0,
+                    sh.n_mwin - 1)
+        sp = mw["mw_sp"][w]
+        wait = mw["mw_wait"][w] + mw["mw_cpuw"][w]
+        prefill = (TASK_DURATIONS_S["submit_task"] / sp
+                   + PREFILL_BASE_S + PREFILL_PER_TOKEN_S * n_in)
+        w2 = np.clip(((t_arr + wait + prefill) / sh.mwin_s)
+                     .astype(np.int64), 0, sh.n_mwin - 1)
+        itp = mw["mw_iter"][w2]
+        lat = (_LAT_CPU_PROMPT / sp + wait + prefill
+               + n_in * _KV_S_PER_TOKEN
+               + _W_TOKEN_ARRIVAL / mw["mw_st"][w2]
+               + 0.5 * itp + n_out * itp)
+        done = t_arr + lat <= sh.duration_s
+        if not done.any():
+            return float("nan"), float("nan"), 0
+        lat_done = lat[done]
+        return (float(lat_done.mean()),
+                float(np.percentile(lat_done, 99)),
+                int(done.sum()))
+
+    def _idle_percentiles(self):
+        hist = self.state["idle_hist"].astype(np.float64)
+        total = hist.sum()
+        if total <= 0:
+            zeros = {p: 0.0 for p in metrics_mod.PERCENTILES}
+            return zeros, 0.0
+        edges = np.linspace(-1.0, 1.0, _IDLE_BINS + 1)
+        cdf = np.cumsum(hist) / total
+        pcts = {}
+        for p in metrics_mod.PERCENTILES:
+            i = int(np.searchsorted(cdf, p / 100.0))
+            i = min(i, _IDLE_BINS - 1)
+            c0 = cdf[i - 1] if i > 0 else 0.0
+            span = cdf[i] - c0
+            frac = ((p / 100.0 - c0) / span) if span > 0 else 0.5
+            pcts[p] = float(edges[i] + frac * (edges[i + 1] - edges[i]))
+        below = float(hist[:int((1.0 - 0.1) * 0.5
+                                * (_IDLE_BINS - 1))].sum() / total)
+        return pcts, below
+
+    def residencies(self) -> tuple[StateResidency, ...]:
+        sh, st = self.shape, self.state
+        out = []
+        for m in range(sh.n_machines):
+            out.append(StateResidency(
+                num_cores=sh.num_cores,
+                duration_s=sh.duration_s,
+                busy_core_s=float(st["res_busy"][m].sum()),
+                idle_core_s=float(st["res_idle"][m].sum()),
+                gated_core_s=float(st["res_gated"][m].sum()),
+                freq_busy_core_s=float(st["res_fbusy"][m].sum()),
+                window_s=sh.pwin_s,
+                window_busy_s=tuple(st["res_busy"][m]),
+                window_idle_s=tuple(st["res_idle"][m]),
+                window_gated_s=tuple(st["res_gated"][m]),
+            ))
+        return tuple(out)
+
+    def collect(self, carbon_model=None, power_model=None,
+                telemetry=None) -> ExperimentResult:
+        sh, st = self.shape, self.state
+        f = self.f0 * (1.0 - st["dvth"] / self.params.headroom)
+        cvs = f.std(axis=1) / f.mean(axis=1)
+        degs = (self.f0 - f).mean(axis=1)
+        idle_pcts, below = self._idle_percentiles()
+        mean_lat, p99_lat, completed = self._latency_postpass()
+        task_cnt = max(float(st["task_cnt"]), 1.0)
+        result = metrics_mod.price_and_build(
+            self.cfg,
+            cvs=cvs, degs=degs,
+            idle_norm_percentiles=idle_pcts,
+            oversub_frac_below=below,
+            task_count_mean=float(st["task_sum"]) / task_cnt,
+            task_count_max=int(round(float(st["task_max"]))),
+            mean_latency_s=mean_lat, p99_latency_s=p99_lat,
+            completed=completed,
+            aging_params=self.params,
+            elapsed=sh.duration_s,
+            residencies=self.residencies(),
+            engine="fleet",
+            carbon_model=carbon_model, power_model=power_model,
+            telemetry=telemetry,
+        )
+        if telemetry is not None:
+            self._emit_telemetry(telemetry)
+        return result
+
+    def _emit_telemetry(self, hub) -> None:
+        """Windowed fleet aggregates into the hub's streaming series —
+        ring-buffered, so any horizon stays bounded."""
+        sh, st = self.shape, self.state
+        mw = self._window_means()
+        have = np.flatnonzero(st["mw_cnt"] > 0)
+        tl = hub.timeline("fleet/windows", maxlen=max(len(have), 1))
+        for i in have:
+            t = float(i * sh.mwin_s)
+            tl.record(t, (float(mw["mw_wait"][i]),
+                          float(mw["mw_iter"][i]),
+                          float(mw["mw_cpuw"][i]),
+                          float(st["mw_comps"][i])))
+        hub.set_gauge("fleet/completions", float(st["completions"]))
+        hub.set_gauge("fleet/gated_cores_final",
+                      float(self.state["gated"].sum()))
+
+
+# ---------------------------------------------------------------------- #
+# runner entry point
+# ---------------------------------------------------------------------- #
+def run_fleet_experiment(cfg: ExperimentConfig, *, telemetry=None,
+                         carbon_model=None, power_model=None,
+                         scenario=None,
+                         requests=None) -> ExperimentResult:
+    """Generate the trace, run the fleet engine, collect the result.
+    Mirrors `run_experiment`'s event path; `requests` short-circuits
+    trace generation when the caller already has it."""
+    if scenario is None:
+        from repro.workloads import get_scenario
+        scenario = get_scenario(cfg.scenario, **cfg.scenario_options)
+    if requests is None:
+        requests = scenario.generate(rate_rps=cfg.rate_rps,
+                                     duration_s=cfg.duration_s,
+                                     seed=cfg.seed)
+    engine = FleetEngine(cfg, telemetry=telemetry)
+    if telemetry is not None:
+        telemetry.event("engine", 0.0, engine="fleet",
+                        backend=engine.backend)
+    engine.run(requests)
+    return engine.collect(carbon_model=carbon_model,
+                          power_model=power_model, telemetry=telemetry)
+
+
+__all__: list[str] = ["FleetEngine", "run_fleet_experiment"]

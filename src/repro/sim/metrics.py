@@ -75,13 +75,69 @@ def collect(cluster: Cluster, cfg: ExperimentConfig,
         mean_latency = p99_latency = float("nan")
     all_tasks = np.concatenate(task_samples) if task_samples else np.zeros(1)
 
+    elapsed = max(m.manager.now for m in cluster.machines)
+    residencies = tuple(m.manager.residency() for m in cluster.machines)
+    return price_and_build(
+        cfg,
+        cvs=cvs,
+        degs=degs,
+        idle_norm_percentiles=percentile_dict(idle_all),
+        oversub_frac_below=float((idle_all < -0.1).mean()),
+        task_count_mean=float(all_tasks.mean()),
+        task_count_max=int(all_tasks.max()),
+        mean_latency_s=mean_latency,
+        p99_latency_s=p99_latency,
+        completed=len(cluster.completed),
+        aging_params=cluster.machines[0].manager.params,
+        elapsed=elapsed,
+        residencies=residencies,
+        per_machine_idle_norm=tuple(
+            tuple(float(x) for x in m.manager.metrics.idle_norm_samples)
+            for m in cluster.machines),
+        per_machine_task_samples=tuple(
+            tuple(int(x) for x in samples) for samples in task_samples),
+        engine="event",
+        carbon_model=carbon_model,
+        power_model=power_model,
+        telemetry=telemetry,
+    )
+
+
+def percentile_dict(x) -> dict[int, float]:
+    """The result schema's standard percentile summary of a sample."""
+    return {p: float(np.percentile(x, p)) for p in PERCENTILES}
+
+
+def price_and_build(cfg: ExperimentConfig, *,
+                    cvs, degs,
+                    idle_norm_percentiles: dict[int, float],
+                    oversub_frac_below: float,
+                    task_count_mean: float, task_count_max: int,
+                    mean_latency_s: float, p99_latency_s: float,
+                    completed: int,
+                    aging_params, elapsed: float,
+                    residencies,
+                    per_machine_idle_norm=None,
+                    per_machine_task_samples=None,
+                    engine: str = "event",
+                    carbon_model: CarbonModel | None = None,
+                    power_model: PowerModel | None = None,
+                    telemetry=None) -> ExperimentResult:
+    """Price per-machine aging + residencies into carbon/power columns
+    and assemble the `ExperimentResult`. Shared by both engines: the
+    event path (`collect`, from a finished `Cluster`) and the fleet
+    path (`repro.sim.fleetsim`, from stacked arrays) feed the same
+    observables through the exact same pricing expressions, so a parity
+    diff between engines compares simulation physics, not accounting.
+    """
+    cvs = np.asarray(cvs)
+    degs = np.asarray(degs)
+
     # Fleet-level aging imbalance + per-machine embodied carbon vs the
     # worst-case linear-aging reference at the same horizon, priced by
     # the experiment's configured carbon model.
-    fleet_cv = _role_weighted_cv(degs, len(cluster.prompt_instances))
-    elapsed = max(m.manager.now for m in cluster.machines)
-    deg_ref = reference_degradation(
-        cluster.machines[0].manager.params, elapsed)
+    fleet_cv = _role_weighted_cv(degs, cfg.n_prompt)
+    deg_ref = reference_degradation(aging_params, elapsed)
     model = carbon_model if carbon_model is not None else \
         get_carbon_model(cfg.carbon_model, **cfg.carbon_options)
     per_machine_carbon = tuple(model.lifetime(deg_ref, max(float(d), 0.0))
@@ -95,7 +151,7 @@ def collect(cluster: Cluster, cfg: ExperimentConfig,
     # genuinely reaches the headline numbers.
     power = power_model if power_model is not None else \
         get_power_model(cfg.power_model, **cfg.power_options)
-    residencies = tuple(m.manager.residency() for m in cluster.machines)
+    residencies = tuple(residencies)
     energies = tuple(power.energy_kwh(r) for r in residencies)
     fleet_energy = float(sum(energies))
     intensity = getattr(model, "intensity", None)
@@ -106,30 +162,27 @@ def collect(cluster: Cluster, cfg: ExperimentConfig,
     if elapsed > 0:
         yearly_op = op_kg * (_SECONDS_PER_YEAR / elapsed)
         mean_power_w = (fleet_energy * 3.6e6
-                        / (elapsed * len(cluster.machines)))
+                        / (elapsed * len(residencies)))
     else:
         yearly_op = mean_power_w = float("nan")
 
     if telemetry is not None:
         _emit_carbon_windows(telemetry, residencies, power, intensity)
 
-    def pct(x):
-        return {p: float(np.percentile(x, p)) for p in PERCENTILES}
-
     return ExperimentResult(
         policy=cfg.policy,
         num_cores=cfg.num_cores,
         rate_rps=cfg.rate_rps,
         scenario=cfg.scenario,
-        freq_cv_percentiles=pct(cvs),
-        mean_degradation_percentiles=pct(degs),
-        idle_norm_percentiles=pct(idle_all),
-        oversub_frac_below=float((idle_all < -0.1).mean()),
-        task_count_mean=float(all_tasks.mean()),
-        task_count_max=int(all_tasks.max()),
-        mean_latency_s=mean_latency,
-        p99_latency_s=p99_latency,
-        completed=len(cluster.completed),
+        freq_cv_percentiles=percentile_dict(cvs),
+        mean_degradation_percentiles=percentile_dict(degs),
+        idle_norm_percentiles=idle_norm_percentiles,
+        oversub_frac_below=oversub_frac_below,
+        task_count_mean=task_count_mean,
+        task_count_max=task_count_max,
+        mean_latency_s=mean_latency_s,
+        p99_latency_s=p99_latency_s,
+        completed=completed,
         router=cfg.router,
         carbon_model=cfg.carbon_model,
         carbon_opts=cfg.carbon_opts,
@@ -148,11 +201,9 @@ def collect(cluster: Cluster, cfg: ExperimentConfig,
         fleet_yearly_total_kgco2eq=fleet_yearly + yearly_op,
         per_machine_cv=tuple(float(x) for x in cvs),
         per_machine_degradation=tuple(float(x) for x in degs),
-        per_machine_idle_norm=tuple(
-            tuple(float(x) for x in m.manager.metrics.idle_norm_samples)
-            for m in cluster.machines),
-        per_machine_task_samples=tuple(
-            tuple(int(x) for x in samples) for samples in task_samples),
+        per_machine_idle_norm=per_machine_idle_norm,
+        per_machine_task_samples=per_machine_task_samples,
+        engine=engine,
         provenance=Provenance(config_hash=cfg.fingerprint(),
                               seed=cfg.seed),
     )

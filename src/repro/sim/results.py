@@ -165,6 +165,13 @@ class ExperimentResult:
     # that legitimately differ between bit-identical reruns, so it must
     # never trip `diff_scalars` drift checks.
     telemetry_summary: dict[str, Any] | None = None
+    # which simulation engine produced this result: "event" (bit-exact
+    # per-machine event loop) or "fleet" (vectorized time-stepped
+    # surrogate, `repro.sim.fleetsim`). Deliberately NOT part of
+    # `scalars()` — engine parity checks diff the metric columns of an
+    # event run against a fleet run, so the engine label itself must
+    # not show up as a drift.
+    engine: str = "event"
     provenance: Provenance | None = None
 
     # ------------------------------------------------------------------ #

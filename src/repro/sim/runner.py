@@ -65,6 +65,15 @@ def run_experiment(cfg: ExperimentConfig,
     carbon_model = get_carbon_model(cfg.carbon_model, **cfg.carbon_options)
     power_model = get_power_model(cfg.power_model, **cfg.power_options)
     scenario = get_scenario(cfg.scenario, **cfg.scenario_options)
+    if cfg.engine == "fleet":
+        # Vectorized time-stepped engine (repro.sim.fleetsim) — the
+        # scale path. The event loop below stays the bit-exact
+        # small-scale reference.
+        from repro.sim.fleetsim import run_fleet_experiment
+        return run_fleet_experiment(cfg, telemetry=hub,
+                                    carbon_model=carbon_model,
+                                    power_model=power_model,
+                                    scenario=scenario)
     if hub is None:
         trace = scenario.generate(rate_rps=cfg.rate_rps,
                                   duration_s=cfg.duration_s, seed=cfg.seed)
@@ -98,6 +107,14 @@ def _run_with_telemetry(cfg, hub, carbon_model, power_model,
     trace = phase("trace_gen", lambda: scenario.generate(
         rate_rps=cfg.rate_rps, duration_s=cfg.duration_s, seed=cfg.seed))
     cluster = phase("cluster_build", lambda: Cluster(cfg, telemetry=hub))
+    # Surface the aging settler's *resolved* backend ("auto" may have
+    # silently fallen back to numpy): visible in the event stream and as
+    # a gauge in `result.telemetry_summary`. The jax backend settles in
+    # float32 — fast, but not bit-exact vs the numpy reference.
+    backend = cluster.fleet_settler.backend
+    hub.event("engine", 0.0, engine="event", aging_backend=backend)
+    hub.set_gauge("engine/aging_backend_is_jax",
+                  1.0 if backend == "jax" else 0.0)
     phase("sim_run", lambda: cluster.run(
         trace, cfg.duration_s, sample_period_s=cfg.sample_period_s))
     sim_wall = hub.gauge("phase/sim_run_wall_s").value

@@ -255,7 +255,15 @@ class Timeline:
     def record(self, t: float, values: Iterable[float]) -> None:
         if len(self._ring) == self._ring.maxlen:
             self.dropped += 1
-        self._ring.append((float(t), tuple(float(v) for v in values)))
+        # Float ndarrays convert through C (`tolist` yields Python
+        # floats), skipping the per-element genexpr — same tuples, just
+        # cheaper; everything else takes the generic coercion.
+        dtype = getattr(values, "dtype", None)
+        if dtype is not None and dtype.kind == "f":
+            vals = tuple(values.tolist())
+        else:
+            vals = tuple(float(v) for v in values)
+        self._ring.append((float(t), vals))
 
     def samples(self) -> list[tuple[float, tuple[float, ...]]]:
         return list(self._ring)
@@ -350,6 +358,15 @@ class TelemetryHub:
         fields["t"] = t
         ev.append(fields)
 
+    def push(self, ev: dict[str, Any]) -> None:
+        """Hot-path `event()`: append a caller-built event dict (which
+        must already carry `"kind"` and `"t"`) without the kwargs
+        repack. Same ring, same drop accounting."""
+        evq = self.events
+        if len(evq) == evq.maxlen:
+            self.events_dropped += 1
+        evq.append(ev)
+
     # -- read side ------------------------------------------------------ #
     def summary(self) -> dict[str, Any]:
         """JSON-safe digest of everything the hub holds — the optional
@@ -443,6 +460,9 @@ class NullHub:
         pass
 
     def event(self, kind: str, t: float, **fields) -> None:
+        pass
+
+    def push(self, ev: dict[str, Any]) -> None:
         pass
 
     def summary(self) -> dict[str, Any]:

@@ -1,0 +1,121 @@
+"""`repro.checkpoint.store`: flat-key .npz checkpoints with atomic
+rename, step retention, bf16 round-trip, and template-driven restore.
+
+The store backs both the training driver and the fleet engine's
+checkpoint/resume (`repro.sim.fleetsim`), whose bit-exact resume
+contract needs numpy template leaves restored as numpy with their
+dtype preserved — pinned here.
+"""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+
+
+@pytest.fixture
+def params():
+    return {"w": np.arange(6, dtype=np.float64).reshape(2, 3),
+            "b": np.array([1.5, -2.5], dtype=np.float32)}
+
+
+class TestSaveLayout:
+    def test_atomic_rename_layout(self, tmp_path, params):
+        """A finished checkpoint is a fully-renamed `step_XXXXXXXX`
+        directory — no stray temp dirs survive, so a reader never sees
+        a half-written checkpoint."""
+        path = store.save(str(tmp_path), 3, params)
+        assert os.path.basename(path) == "step_00000003"
+        assert sorted(os.listdir(tmp_path)) == ["step_00000003"]
+        assert "params.npz" in os.listdir(path)
+        assert "meta.json" in os.listdir(path)
+
+    def test_meta_round_trip(self, tmp_path, params):
+        store.save(str(tmp_path), 5, params,
+                   extra={"config": "abc123", "engine": "fleet"})
+        meta = store.meta(str(tmp_path))
+        assert meta["step"] == 5
+        assert meta["config"] == "abc123"
+        assert meta["engine"] == "fleet"
+
+    def test_keep_retention_gc(self, tmp_path, params):
+        """`keep=` bounds the directory to the newest N checkpoints."""
+        for step in range(6):
+            store.save(str(tmp_path), step, params, keep=2)
+        kept = sorted(d for d in os.listdir(tmp_path)
+                      if d.startswith("step_"))
+        assert kept == ["step_00000004", "step_00000005"]
+
+    def test_opt_state_is_separate_file(self, tmp_path, params):
+        opt = {"m": np.zeros(3), "v": np.ones(3)}
+        path = store.save(str(tmp_path), 0, params, opt_state=opt)
+        assert "opt_state.npz" in os.listdir(path)
+        back = store.restore(str(tmp_path), opt, name="opt_state.npz")
+        np.testing.assert_array_equal(back["v"], opt["v"])
+
+
+class TestRestore:
+    def test_latest_step(self, tmp_path, params):
+        assert store.latest_step(str(tmp_path)) is None
+        store.save(str(tmp_path), 2, params)
+        store.save(str(tmp_path), 9, params)
+        assert store.latest_step(str(tmp_path)) == 9
+
+    def test_restore_from_latest_and_by_step(self, tmp_path, params):
+        store.save(str(tmp_path), 1, params)
+        newer = {k: v + 1 for k, v in params.items()}
+        store.save(str(tmp_path), 2, newer)
+        by_latest = store.restore(str(tmp_path), params)
+        np.testing.assert_array_equal(by_latest["w"], newer["w"])
+        by_step = store.restore(str(tmp_path), params, step=1)
+        np.testing.assert_array_equal(by_step["w"], params["w"])
+
+    def test_missing_checkpoint_raises(self, tmp_path, params):
+        with pytest.raises(FileNotFoundError):
+            store.restore(str(tmp_path), params)
+
+    def test_numpy_template_preserves_dtype(self, tmp_path, params):
+        """float64 numpy leaves come back as float64 numpy — the store
+        must not route them through jax (x64 off would silently
+        truncate to float32, breaking the fleet engine's bit-exact
+        resume)."""
+        f64 = {"dvth": np.array([1e-3 + 1e-12, 2e-3], dtype=np.float64)}
+        store.save(str(tmp_path), 0, f64)
+        back = store.restore(str(tmp_path), f64)
+        assert isinstance(back["dvth"], np.ndarray)
+        assert back["dvth"].dtype == np.float64
+        np.testing.assert_array_equal(back["dvth"], f64["dvth"])
+
+    def test_jax_template_restores_jax(self, tmp_path):
+        tree = {"w": jnp.ones((2, 2), dtype=jnp.float32)}
+        store.save(str(tmp_path), 0, tree)
+        back = store.restore(str(tmp_path), tree)
+        assert isinstance(back["w"], jnp.ndarray)
+        assert back["w"].dtype == jnp.float32
+
+    def test_bf16_round_trip(self, tmp_path):
+        """npz has no bf16: save() stores the raw uint16 bits and
+        restore() re-views them through the template dtype — exact."""
+        tree = {"w": jnp.array([0.5, -1.25, 3.0, 1e-2],
+                               dtype=jnp.bfloat16)}
+        store.save(str(tmp_path), 0, tree)
+        raw = np.load(os.path.join(str(tmp_path), "step_00000000",
+                                   "params.npz"))
+        assert raw["w"].dtype == np.uint16
+        back = store.restore(str(tmp_path), tree)
+        assert back["w"].dtype == jnp.bfloat16
+        np.testing.assert_array_equal(np.asarray(back["w"], np.float32),
+                                      np.asarray(tree["w"], np.float32))
+
+    def test_nested_tree_structure(self, tmp_path):
+        tree = {"layer": {"w": np.ones((2,)), "b": np.zeros((2,))},
+                "scale": np.array(2.0)}
+        store.save(str(tmp_path), 0, tree)
+        back = store.restore(str(tmp_path), tree)
+        assert set(back) == {"layer", "scale"}
+        np.testing.assert_array_equal(back["layer"]["w"],
+                                      tree["layer"]["w"])

@@ -1,0 +1,192 @@
+"""Fleet engine (`repro.sim.fleetsim`): parity vs the event-loop
+reference, backend agreement, checkpoint/resume exactness, config
+plumbing, and a scale smoke.
+
+The fleet engine is a mean-field surrogate, so event-engine parity is
+pinned with tolerances (calibrated against the measured deltas on the
+default 22-machine config), NOT bit-exactness — that property belongs
+to the event engine alone (tests/test_perf_bitexact.py).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.sim import ExperimentConfig
+from repro.sim.fleetsim import FleetEngine, _resolve_backend
+from repro.sim.runner import run_experiment
+
+
+def _has_jax() -> bool:
+    try:
+        import jax  # noqa: F401
+        return True
+    except ImportError:
+        return False
+
+
+@pytest.fixture(scope="module")
+def event_result():
+    return run_experiment(ExperimentConfig())
+
+
+@pytest.fixture(scope="module")
+def fleet_result():
+    return run_experiment(
+        ExperimentConfig().with_engine("fleet", backend="numpy"))
+
+
+def _rel(a: float, b: float) -> float:
+    return abs(a - b) / max(abs(b), 1e-12)
+
+
+class TestEventParity:
+    """Fleet surrogate vs event reference on the default config
+    (22 machines x 120 s @ 60 rps). Tolerances bracket the measured
+    deltas with headroom, tight enough that a physics regression in
+    either engine trips them."""
+
+    def test_engine_labels(self, event_result, fleet_result):
+        assert event_result.engine == "event"
+        assert fleet_result.engine == "fleet"
+        # the label must NOT leak into the diffable scalar row
+        assert "engine" not in event_result.scalars()
+        assert "engine" not in fleet_result.scalars()
+
+    def test_throughput(self, event_result, fleet_result):
+        assert _rel(fleet_result.completed, event_result.completed) < 0.10
+
+    def test_latency(self, event_result, fleet_result):
+        assert _rel(fleet_result.mean_latency_s,
+                    event_result.mean_latency_s) < 0.10
+        assert _rel(fleet_result.p99_latency_s,
+                    event_result.p99_latency_s) < 0.10
+
+    def test_aging(self, event_result, fleet_result):
+        assert _rel(fleet_result.mean_degradation_percentiles[50],
+                    event_result.mean_degradation_percentiles[50]) < 0.15
+        assert _rel(fleet_result.freq_cv_percentiles[50],
+                    event_result.freq_cv_percentiles[50]) < 0.10
+
+    def test_carbon_and_energy(self, event_result, fleet_result):
+        assert _rel(fleet_result.fleet_yearly_kgco2eq,
+                    event_result.fleet_yearly_kgco2eq) < 0.15
+        assert _rel(fleet_result.fleet_energy_kwh,
+                    event_result.fleet_energy_kwh) < 0.05
+
+    def test_shapes_match_fleet(self, event_result, fleet_result):
+        n = ExperimentConfig().n_machines
+        for res in (event_result, fleet_result):
+            assert len(res.per_machine_degradation) == n
+            assert len(res.per_machine_residency) == n
+            assert np.isfinite(res.per_machine_degradation).all()
+
+
+@pytest.mark.skipif(not _has_jax(), reason="jax not installed")
+class TestBackendAgreement:
+    """numpy (f64 reference) vs jax (f32 lax.scan) run the same
+    functional step; agreement is close but not bit-exact."""
+
+    @pytest.fixture(scope="class")
+    def pair(self):
+        cfg = ExperimentConfig(duration_s=60.0)
+        res_np = run_experiment(cfg.with_engine("fleet", backend="numpy"))
+        res_jx = run_experiment(cfg.with_engine("fleet", backend="jax"))
+        return res_np, res_jx
+
+    def test_throughput_and_latency(self, pair):
+        res_np, res_jx = pair
+        assert _rel(res_jx.completed, res_np.completed) < 0.01
+        assert _rel(res_jx.mean_latency_s, res_np.mean_latency_s) < 0.01
+
+    def test_aging(self, pair):
+        res_np, res_jx = pair
+        assert _rel(res_jx.mean_degradation_percentiles[50],
+                    res_np.mean_degradation_percentiles[50]) < 0.02
+        assert _rel(res_jx.fleet_yearly_kgco2eq,
+                    res_np.fleet_yearly_kgco2eq) < 0.05
+
+
+class TestCheckpointResume:
+    def _cfg(self, ckpt_dir: str) -> ExperimentConfig:
+        return ExperimentConfig(duration_s=60.0).with_engine(
+            "fleet", backend="numpy", checkpoint_dir=ckpt_dir,
+            checkpoint_every_s=20.0)
+
+    def test_resume_is_exact(self, tmp_path):
+        """Kill-and-resume reproduces the uninterrupted run's scalar
+        row bit-for-bit (numpy backend contract)."""
+        ckpt = str(tmp_path / "ckpt")
+        cfg = self._cfg(ckpt)
+        uninterrupted = run_experiment(cfg)
+        # Simulate the interruption: drop the checkpoints past t=20 s,
+        # so the rerun resumes from the earliest retained one.
+        steps = sorted(d for d in os.listdir(ckpt)
+                       if d.startswith("step_"))
+        assert len(steps) >= 2, "expected several periodic checkpoints"
+        for d in steps[1:]:
+            shutil.rmtree(os.path.join(ckpt, d))
+        resumed = run_experiment(cfg)
+        a, b = uninterrupted.scalars(), resumed.scalars()
+        assert a.keys() == b.keys()
+        for k in a:
+            assert a[k] == b[k] or (a[k] != a[k] and b[k] != b[k]), k
+
+    def test_resume_refuses_config_mismatch(self, tmp_path):
+        ckpt = str(tmp_path / "ckpt")
+        run_experiment(self._cfg(ckpt))
+        other = ExperimentConfig(duration_s=60.0, seed=7).with_engine(
+            "fleet", backend="numpy", checkpoint_dir=ckpt,
+            checkpoint_every_s=20.0)
+        with pytest.raises(ValueError, match="refusing to resume"):
+            run_experiment(other)
+
+
+class TestConfigPlumbing:
+    def test_default_fingerprint_unchanged(self):
+        """Adding the engine axis must not re-hash existing configs:
+        the default (event, no opts) is omitted from the payload, so
+        every pre-engine fingerprint — including the pinned drift-gate
+        golden — survives."""
+        assert ExperimentConfig().fingerprint() == \
+            ExperimentConfig(engine="event").fingerprint()
+
+    def test_fleet_fingerprint_differs(self):
+        base = ExperimentConfig()
+        assert base.with_engine("fleet").fingerprint() != base.fingerprint()
+        assert base.with_engine(
+            "fleet", backend="numpy").fingerprint() != \
+            base.with_engine("fleet").fingerprint()
+
+    def test_unknown_engine_rejected(self):
+        with pytest.raises(ValueError, match="unknown engine"):
+            ExperimentConfig(engine="warp")
+
+    def test_unknown_engine_opts_rejected(self):
+        cfg = ExperimentConfig().with_engine("fleet", warp_factor=9)
+        with pytest.raises(ValueError, match="unknown engine_opts"):
+            FleetEngine(cfg)
+
+    def test_backend_resolution(self):
+        assert _resolve_backend("numpy") == "numpy"
+        expect = "jax" if _has_jax() else "numpy"
+        assert _resolve_backend("auto") == expect
+        with pytest.raises(ValueError, match="unknown fleet backend"):
+            _resolve_backend("fortran")
+
+
+class TestScaleSmoke:
+    def test_200_machines(self):
+        """A 200-machine fleet through the vectorized engine at test
+        scale (the >= 1 h headline lives in BENCH_sim.json)."""
+        cfg = ExperimentConfig(
+            n_prompt=45, n_token=155, rate_rps=545.0,
+            duration_s=60.0).with_engine("fleet", backend="numpy")
+        res = run_experiment(cfg)
+        assert res.engine == "fleet"
+        assert res.completed > 0
+        assert len(res.per_machine_degradation) == 200
+        assert np.isfinite(res.fleet_yearly_total_kgco2eq)
