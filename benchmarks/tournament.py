@@ -1,0 +1,168 @@
+"""Standing robustness tournament: policy x scenario x fault model.
+
+Every core-management policy runs the same workloads under the same
+injected faults (identical silicon, identical fault RNG streams), and
+is scored on how gracefully it degrades: availability, tail latency,
+total yearly carbon, and *regret* — the carbon gap to the aging-greedy
+oracle run under exactly the same faults. The oracle maps every task to
+the least-aged core with full observability, so regret isolates how
+much of a policy's fault exposure is avoidable by aging awareness
+alone.
+
+    PYTHONPATH=src python benchmarks/tournament.py            # full
+    PYTHONPATH=src python benchmarks/tournament.py --mini     # CI smoke
+
+Emits a per-(scenario, fault model) text table plus a JSON artifact
+(`experiments/tournament.json`, or `tournament_mini.json` with --mini)
+via the shared benchmark emitter. The event engine is used throughout —
+fault experiments at fleet scale are surrogate estimates (see
+`repro.sim.fleetsim`), and the tournament is the reference scoreboard.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks import common
+from repro.sim import ExperimentConfig, run_policy_sweep
+
+ORACLE = "aging-greedy"
+POLICIES = ("linux", "least-aged", "proposed")
+
+#: (fault model, opts) grid for the full tournament — calibrated so
+#: every model actually fires at the default 60 s horizon.
+FAULT_SPECS = (
+    ("none", {}),
+    ("guardband", {"margin": 0.012}),
+    ("machine-crash", {"mttf_s": 400.0, "reboot_s": 30.0}),
+    ("transient-stall", {}),
+)
+
+#: mini-grid variant: small fleet, short horizon, rates bumped so the
+#: CI smoke still observes failures/crashes/stalls.
+MINI_FAULT_SPECS = (
+    ("none", {}),
+    ("guardband", {"margin": 0.010}),
+    ("machine-crash", {"mttf_s": 15.0, "reboot_s": 5.0}),
+    ("transient-stall", {"rate_per_s": 0.2}),
+)
+
+COLUMNS = ("availability", "p99_latency_s", "fleet_yearly_total_kgco2eq",
+           "regret_kgco2eq", "core_failures", "machine_crashes", "stalls",
+           "retries", "failed_requests", "completed")
+
+
+def run_tournament(cfg: ExperimentConfig, scenarios, fault_specs,
+                   policies=POLICIES) -> list[dict]:
+    """One sweep per fault spec (so each model carries its own opts);
+    the oracle rides in every sweep for the regret column."""
+    rows: list[dict] = []
+    for fm, opts in fault_specs:
+        f_cfg = cfg if fm == cfg.fault_model else \
+            cfg.with_fault_model(fm, **opts)
+        sweep = run_policy_sweep(f_cfg, policies=policies + (ORACLE,),
+                                 scenarios=tuple(scenarios))
+        for sc in scenarios:
+            oracle = sweep[(ORACLE, sc)]
+            for policy in policies + (ORACLE,):
+                r = sweep[(policy, sc)]
+                rows.append({
+                    "policy": policy,
+                    "scenario": sc,
+                    "fault_model": fm,
+                    "availability": round(r.availability, 6),
+                    "p99_latency_s": round(r.p99_latency_s, 4),
+                    "fleet_yearly_total_kgco2eq":
+                        round(r.fleet_yearly_total_kgco2eq, 4),
+                    "regret_kgco2eq":
+                        round(r.fleet_yearly_total_kgco2eq
+                              - oracle.fleet_yearly_total_kgco2eq, 4),
+                    "core_failures": r.core_failures,
+                    "machine_crashes": r.machine_crashes,
+                    "stalls": r.stalls,
+                    "retries": r.retries,
+                    "failed_requests": r.failed_requests,
+                    "completed": r.completed,
+                    "submitted": r.submitted,
+                    "config_hash": r.provenance.config_hash,
+                })
+    return rows
+
+
+def print_tables(rows: list[dict]) -> None:
+    """Grouped text tables, one per (scenario, fault model) cell."""
+    groups: dict[tuple, list[dict]] = {}
+    for row in rows:
+        groups.setdefault((row["scenario"], row["fault_model"]),
+                          []).append(row)
+    hdr = ("policy", *COLUMNS)
+    for (sc, fm), grp in groups.items():
+        print(f"\n== scenario={sc} fault_model={fm} ==")
+        widths = [max(len(h), 12) for h in hdr]
+        print("  ".join(h.ljust(w) for h, w in zip(hdr, widths)))
+        for row in sorted(grp, key=lambda r: r["policy"]):
+            cells = [str(row["policy"])] + [str(row[c]) for c in COLUMNS]
+            print("  ".join(c.ljust(w) for c, w in zip(cells, widths)))
+
+
+def check_rows(rows: list[dict]) -> list[str]:
+    """Structural invariants the CI smoke asserts on the mini-grid."""
+    problems = []
+    by_cell: dict[tuple, dict[str, dict]] = {}
+    for row in rows:
+        by_cell.setdefault((row["scenario"], row["fault_model"]),
+                           {})[row["policy"]] = row
+    for (sc, fm), cell in by_cell.items():
+        for policy, row in cell.items():
+            if not (0.0 <= row["availability"] <= 1.0):
+                problems.append(f"{policy}/{sc}/{fm}: availability "
+                                f"{row['availability']} out of range")
+            if fm == "none" and row["availability"] != 1.0:
+                problems.append(f"{policy}/{sc}/none: expected perfect "
+                                f"availability")
+        if ORACLE in cell and abs(cell[ORACLE]["regret_kgco2eq"]) > 1e-9:
+            problems.append(f"{sc}/{fm}: oracle regret must be zero")
+    return problems
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0],
+        epilog=common.axes_epilog(),
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    common.add_scenario_arg(ap)
+    ap.add_argument("--mini", action="store_true",
+                    help="CI mini-grid: 1+2-machine fleet, 30 s horizon, "
+                    "fault opts tuned to fire at that scale")
+    ap.add_argument("--duration", type=float, default=None,
+                    help="override horizon seconds")
+    ap.add_argument("--seed", type=int, default=3)
+    args = ap.parse_args()
+    scenarios = common.resolve_scenarios(args)
+
+    if args.mini:
+        cfg = ExperimentConfig(duration_s=args.duration or 30.0,
+                               n_prompt=1, n_token=2, rate_rps=8.0,
+                               seed=args.seed)
+        specs = MINI_FAULT_SPECS
+    else:
+        cfg = ExperimentConfig(duration_s=args.duration or 60.0,
+                               seed=args.seed)
+        specs = FAULT_SPECS
+
+    rows = run_tournament(cfg, scenarios, specs)
+    print_tables(rows)
+    common.emit("tournament_mini" if args.mini else "tournament", rows)
+    problems = check_rows(rows)
+    if problems:
+        print("\ntournament invariant violations:", file=sys.stderr)
+        for p in problems:
+            print(f"  {p}", file=sys.stderr)
+        return 1
+    print(f"\ntournament OK: {len(rows)} rows across "
+          f"{len(scenarios)} scenario(s) x {len(specs)} fault model(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

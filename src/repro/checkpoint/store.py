@@ -2,13 +2,22 @@
 
 No orbax offline; this implements atomic-rename checkpoints with step
 retention, which is what the training driver needs.
+
+Every array file's sha256 + byte length is recorded in `meta.json` at
+save time and verified on restore: a truncated or bit-flipped newest
+checkpoint makes `restore()` fall back to the latest earlier step that
+verifies (with a warning) instead of resuming from garbage. An
+explicitly requested `step=` stays strict and raises. Checkpoints
+written before digests existed carry no record and load as before.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import re
 import tempfile
+import warnings
 
 import jax
 import numpy as np
@@ -41,15 +50,49 @@ def save(directory: str, step: int, params, opt_state=None, extra: dict | None =
          keep: int = 3) -> str:
     os.makedirs(directory, exist_ok=True)
     tmp = tempfile.mkdtemp(dir=directory)
+    files = ["params.npz"]
     np.savez(os.path.join(tmp, "params.npz"), **_flatten(params))
     if opt_state is not None:
+        files.append("opt_state.npz")
         np.savez(os.path.join(tmp, "opt_state.npz"), **_flatten(opt_state))
+    digests = {n: _digest(os.path.join(tmp, n)) for n in files}
     with open(os.path.join(tmp, "meta.json"), "w") as f:
-        json.dump({"step": step, **(extra or {})}, f)
+        json.dump({"step": step, **(extra or {}), "digests": digests}, f)
     final = os.path.join(directory, f"step_{step:08d}")
     os.rename(tmp, final)
     _gc(directory, keep)
     return final
+
+
+def _digest(path: str) -> dict:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return {"sha256": h.hexdigest(), "bytes": os.path.getsize(path)}
+
+
+def _verify(directory: str, step: int, name: str) -> str | None:
+    """Check `name` in checkpoint `step` against its recorded digest.
+    Returns a human-readable defect description, or None when the file
+    passes (or predates digest records)."""
+    stepdir = os.path.join(directory, f"step_{step:08d}")
+    path = os.path.join(stepdir, name)
+    if not os.path.isfile(path):
+        return f"missing {name}"
+    try:
+        with open(os.path.join(stepdir, "meta.json")) as f:
+            rec = json.load(f).get("digests", {}).get(name)
+    except (OSError, json.JSONDecodeError) as e:
+        return f"unreadable meta.json ({e})"
+    if rec is None:
+        return None
+    size = os.path.getsize(path)
+    if size != rec["bytes"]:
+        return f"{name} is {size} bytes, expected {rec['bytes']}"
+    if _digest(path)["sha256"] != rec["sha256"]:
+        return f"{name} does not match its recorded sha256"
+    return None
 
 
 def _gc(directory: str, keep: int) -> None:
@@ -62,20 +105,49 @@ def _gc(directory: str, keep: int) -> None:
         os.rmdir(full)
 
 
-def latest_step(directory: str) -> int | None:
+def _steps(directory: str) -> list[int]:
     if not os.path.isdir(directory):
-        return None
-    ckpts = sorted(d for d in os.listdir(directory)
-                   if re.fullmatch(r"step_\d{8}", d))
-    return int(ckpts[-1][5:]) if ckpts else None
+        return []
+    return sorted(int(d[5:]) for d in os.listdir(directory)
+                  if re.fullmatch(r"step_\d{8}", d))
+
+
+def latest_step(directory: str) -> int | None:
+    ckpts = _steps(directory)
+    return ckpts[-1] if ckpts else None
 
 
 def restore(directory: str, template, step: int | None = None,
             name: str = "params.npz"):
-    """Restore a pytree matching `template`'s structure."""
-    step = step if step is not None else latest_step(directory)
+    """Restore a pytree matching `template`'s structure.
+
+    Without `step=`, the newest checkpoint is digest-verified first; if
+    it is corrupt (truncated write, bit rot) the newest *earlier* step
+    that verifies is restored instead, with a warning. An explicit
+    `step=` is strict: a failed check raises `ValueError`.
+    """
+    explicit = step is not None
+    if step is None:
+        step = latest_step(directory)
     if step is None:
         raise FileNotFoundError(f"no checkpoints in {directory}")
+    defect = _verify(directory, step, name)
+    if defect is not None:
+        if explicit:
+            raise ValueError(f"checkpoint step {step} in {directory} "
+                             f"failed verification: {defect}")
+        for cand in reversed(_steps(directory)[:-1]):
+            if _verify(directory, cand, name) is None:
+                warnings.warn(
+                    f"newest checkpoint (step {step}) in {directory} "
+                    f"failed verification: {defect}; falling back to "
+                    f"step {cand}", RuntimeWarning, stacklevel=2)
+                step = cand
+                break
+        else:
+            raise ValueError(
+                f"checkpoint step {step} in {directory} failed "
+                f"verification ({defect}) and no earlier step verifies")
     path = os.path.join(directory, f"step_{step:08d}", name)
     data = np.load(path)
     leaves, treedef = jax.tree_util.tree_flatten_with_path(template)

@@ -84,6 +84,7 @@ def apply_correction(
     active_mask: np.ndarray,
     task_assigned: np.ndarray,
     age_key: np.ndarray,
+    failed_mask: np.ndarray | None = None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Algorithm 2 lines 18-22: flip idle states, aging-aware ordering.
 
@@ -93,21 +94,26 @@ def apply_correction(
       task_assigned: (N,) bool; cores running a task are never idled.
       age_key: (N,) float, larger = more aged (we use dVth directly — the
         periodic path may read accurate aging-sensor data, paper §5).
+      failed_mask: optional (N,) bool of permanently-failed cores
+        (`repro.faults`); a failed core is parked in deep idle and must
+        never be woken. None (or all-False) leaves the selection
+        identical to the pre-fault behavior.
 
     Returns (indices_to_idle, indices_to_wake); caller mutates state so it
     can also account idle-history bookkeeping and timestamps.
     """
-    n = active_mask.shape[0]
     if correction > 0:
-        # Most-aged-first among active cores without a task.
+        # Most-aged-first among active cores without a task (failed
+        # cores are never active, so no extra mask is needed here).
         cand = np.flatnonzero(active_mask & ~task_assigned)
         order = cand[np.argsort(-age_key[cand], kind="stable")]
         return order[:correction], np.empty(0, dtype=np.int64)
     if correction < 0:
-        # Least-aged-first among deep-idle cores.
-        cand = np.flatnonzero(~active_mask)
+        # Least-aged-first among deep-idle survivors.
+        idle = ~active_mask if failed_mask is None \
+            else ~active_mask & ~failed_mask
+        cand = np.flatnonzero(idle)
         order = cand[np.argsort(age_key[cand], kind="stable")]
         return np.empty(0, dtype=np.int64), order[: -correction]
     empty = np.empty(0, dtype=np.int64)
-    del n
     return empty, empty

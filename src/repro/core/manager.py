@@ -54,6 +54,7 @@ class CoreManager:
         idling_period_s: float = 1.0,
         policy_opts: dict | None = None,
         on_promote=None,
+        on_demote=None,
         res_window_s: float = 1.0,
         telemetry=None,
         telemetry_id: int = 0,
@@ -65,6 +66,11 @@ class CoreManager:
         # recompute the task's remaining duration (the simulator reschedules
         # its completion event; see `Machine.run_cpu_task`).
         self.on_promote = on_promote
+        # Called as on_demote(task_id, now, speed) when the fault layer
+        # pushes a task OFF its core (core failure) back into the
+        # oversubscription queue — the inverse of on_promote, reusing
+        # the same rebanking machinery (`Machine._on_demote`).
+        self.on_demote = on_demote
         self.params = aging_params
         self.idling_period_s = idling_period_s
         self.rng = rng if rng is not None else np.random.default_rng(0)
@@ -138,6 +144,15 @@ class CoreManager:
         # task -> settled frequency factor it runs at (assign/promote
         # time); consumed on release for frequency-weighted busy time.
         self._task_speed: dict[int, float] = {}
+        # ---- fault layer (repro.faults) ---- #
+        # Permanently offlined cores (guardband failures). A failed core
+        # is held in DEEP_IDLE (power-fenced: NBTI stress ends, so its
+        # aging freezes — matching the frozen-ADF treatment of gated
+        # cores) and never re-enters the free heap or wake candidates.
+        self.failed = np.zeros(n, dtype=bool)
+        # core -> transient slowdown factor; empty dict == zero cost on
+        # the assign hot path (one falsy check per assign).
+        self._stalls: dict[int, float] = {}
         # Telemetry sink (repro.telemetry.TelemetryHub) or None. Hot
         # paths guard every emission with one `is not None` test so the
         # disabled cost is exactly that test — recording is pure
@@ -359,6 +374,10 @@ class CoreManager:
         # aging.frequency_scalar inlined (Eq. 1) on plain floats.
         speed = self.f0.item(core) * (1.0 - self.dvth.item(core)
                                       / self._headroom)
+        if self._stalls:
+            stall = self._stalls.get(core)
+            if stall is not None:
+                speed *= stall
         self._task_speed[task_id] = speed
         tel = self._tel
         if tel is not None:
@@ -432,6 +451,10 @@ class CoreManager:
             self._mark_busy(core, task_id, now)
             speed = aging.frequency_scalar(
                 self.params, float(self.f0[core]), float(self.dvth[core]))
+            if self._stalls:
+                stall = self._stalls.get(core)
+                if stall is not None:
+                    speed *= stall
             self._task_speed[task_id] = speed
             if self._tel is not None:
                 self._c_promotions.inc()
@@ -441,6 +464,103 @@ class CoreManager:
                                 "cause": "promotion"})
             if self.on_promote is not None:
                 self.on_promote(task_id, core, now, speed)
+
+    # ------------------------------------------------------------------ #
+    # fault layer (repro.faults — only called when faults are active)
+    # ------------------------------------------------------------------ #
+    def fail_core(self, core: int, now: float) -> None:
+        """Permanently offline `core` (guardband violation): settle its
+        aging, power-fence it (DEEP_IDLE — NBTI stress ends), and demote
+        any in-flight task back into the oversubscription queue so the
+        promotion machinery migrates it to a surviving core."""
+        if self.failed.item(core):
+            return
+        self._settle(core, now)
+        self.residency_acc.advance(now, len(self._busy_cores),
+                                   self._n_gated)
+        self.failed[core] = True
+        self._stalls.pop(core, None)
+        tid = int(self.task_of_core.item(core))
+        self.c_state[core] = CState.DEEP_IDLE
+        self._stamp[core] += 1           # drop any free-heap entry
+        if tid >= 0:
+            self.task_of_core[core] = -1
+            self._busy_cores.discard(core)
+            self.cum_work[core] += now - self.task_start.get(tid, now)
+            self.core_of_task[tid] = OVERSUBSCRIBED
+            self.oversub_tasks.add(tid)
+            self._oversub_accounted[tid] = now
+            self._task_speed.pop(tid, None)
+            if self.on_demote is not None:
+                # Same speed bound oversubscribed assigns get: the
+                # fastest surviving busy core's settled frequency.
+                self.on_demote(tid, now, self._busy_max_frequency(now))
+        self._n_gated = int((self.c_state == CState.DEEP_IDLE).sum())
+        if self.oversub_tasks:
+            # Migration = demotion + immediate promotion when a free
+            # core exists (the PR-4 rebanking path reschedules it).
+            self._promote_oversubscribed(now)
+
+    def crash(self, now: float) -> None:
+        """Machine lost power: every in-flight task dies, all cores
+        power down (DEEP_IDLE — aging freezes while the machine is
+        dark). The caller (cluster fault layer) owns request retries and
+        the eventual `reboot`."""
+        self.settle_all(now)
+        for tid in list(self.oversub_tasks):
+            self._account_oversub(tid, now)
+        self.oversub_tasks.clear()
+        for tid, core in self.core_of_task.items():
+            if core >= 0:
+                self.cum_work[core] += now - self.task_start.get(tid, now)
+        self.core_of_task.clear()
+        self.task_start.clear()
+        self._task_speed.clear()
+        self._stalls.clear()
+        self._oversub_accounted.clear()
+        self.task_of_core[:] = -1
+        self._busy_cores.clear()
+        self.c_state[:] = CState.DEEP_IDLE
+        for i in range(self.num_cores):
+            self._stamp[i] += 1
+        self._n_gated = self.num_cores
+
+    def reboot(self, now: float) -> None:
+        """Power restored after `crash`: wake every surviving core into
+        a fresh-boot working set (the policy re-gates on its next
+        periodic); failed cores stay fenced."""
+        self.settle_all(now)
+        up = np.flatnonzero(~self.failed)
+        self.c_state[~self.failed] = CState.ACTIVE
+        self.idle_since[:] = now
+        for i in up:
+            self._push_free(int(i))
+        self._n_gated = int(self.failed.sum())
+
+    def set_core_slowdown(self, core: int, now: float,
+                          factor: float) -> None:
+        """Transient stall: new assigns on `core` run at `factor` x its
+        settled speed, and any in-flight task is re-rated through the
+        promotion rebanking callback (bank progress, reschedule)."""
+        self._stalls[core] = factor
+        self._rerate_core(core, now, factor)
+
+    def clear_core_slowdown(self, core: int, now: float) -> None:
+        """Stall expired: restore full speed (re-rates in-flight work)."""
+        if self._stalls.pop(core, None) is not None:
+            self._rerate_core(core, now, 1.0)
+
+    def _rerate_core(self, core: int, now: float, factor: float) -> None:
+        tid = int(self.task_of_core.item(core))
+        if tid < 0:
+            return
+        self._settle(core, now)
+        speed = aging.frequency_scalar(
+            self.params, float(self.f0[core]), float(self.dvth[core])) \
+            * factor
+        self._task_speed[tid] = speed
+        if self.on_promote is not None:
+            self.on_promote(tid, core, now, speed)
 
     # ------------------------------------------------------------------ #
     # periodic control + metrics
@@ -502,6 +622,11 @@ class CoreManager:
                           "cause": cause})
         for i in corr.to_wake:
             i = int(i)
+            if self.failed.item(i):
+                # Policies see `CoreView.failed_mask`, but a custom
+                # policy that ignores it must still never resurrect a
+                # failed core.
+                continue
             self.c_state[i] = CState.ACTIVE
             self.idle_since[i] = now
             self._push_free(i)

@@ -98,6 +98,13 @@ class CoreView:
         return _readonly(self._m.cum_work)
 
     @property
+    def failed_mask(self) -> np.ndarray:
+        """(N,) bool — cores permanently offlined by the fault layer
+        (`repro.faults`). All-False unless a fault model is active;
+        failed cores are held in deep idle and must never be woken."""
+        return _readonly(self._m.failed)
+
+    @property
     def oversub_count(self) -> int:
         """Number of tasks currently waiting without a core."""
         return len(self._m.oversub_tasks)

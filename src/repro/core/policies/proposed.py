@@ -84,7 +84,8 @@ class ProposedPolicy(CorePolicy):
                     # only -corr of them (corr > corr0 here).
                     deferred = corr - corr0
         to_idle, to_wake = idling.apply_correction(
-            corr, active_mask, assigned_mask, view.dvth)
+            corr, active_mask, assigned_mask, view.dvth,
+            failed_mask=view.failed_mask)
         if not (len(to_idle) or len(to_wake) or deferred):
             return None
         return IdleCorrection(to_idle=to_idle, to_wake=to_wake,

@@ -26,6 +26,7 @@ from typing import Any, Mapping
 
 from repro.carbon.registry import canonical_carbon_model_name
 from repro.core.policies import canonical_policy_name
+from repro.faults.registry import canonical_fault_model_name
 from repro.power.registry import canonical_power_model_name
 from repro.sim.routing import canonical_router_name
 from repro.workloads import canonical_scenario_name
@@ -76,6 +77,12 @@ class ExperimentConfig:
     # checkpoint_every_s, resume).
     engine: str = "event"
     engine_opts: tuple[tuple[str, Any], ...] = ()
+    # fault injection (model registry name + constructor options; see
+    # `repro.faults` — the sixth axis). "none" (the default) builds no
+    # fault machinery at all: bit-exact with pre-fault behavior, and
+    # omitted from `fingerprint()` so historical hashes survive.
+    fault_model: str = "none"
+    fault_opts: tuple[tuple[str, Any], ...] = ()
     # streaming telemetry (repro.telemetry): False = zero-cost off.
     # `telemetry_opts` carries TelemetryHub options (window_s,
     # max_events, max_windows, timeline_every, timeline_maxlen) plus the
@@ -99,9 +106,11 @@ class ExperimentConfig:
                            canonical_carbon_model_name(self.carbon_model))
         object.__setattr__(self, "power_model",
                            canonical_power_model_name(self.power_model))
+        object.__setattr__(self, "fault_model",
+                           canonical_fault_model_name(self.fault_model))
         for field in ("policy_opts", "scenario_opts", "router_opts",
                       "carbon_opts", "power_opts", "telemetry_opts",
-                      "engine_opts"):
+                      "engine_opts", "fault_opts"):
             opts = getattr(self, field)
             if isinstance(opts, Mapping):
                 opts = opts.items()
@@ -148,6 +157,11 @@ class ExperimentConfig:
         return dict(self.power_opts)
 
     @property
+    def fault_options(self) -> dict[str, Any]:
+        """`fault_opts` as a plain kwargs dict."""
+        return dict(self.fault_opts)
+
+    @property
     def telemetry_options(self) -> dict[str, Any]:
         """`telemetry_opts` as a plain kwargs dict."""
         return dict(self.telemetry_opts)
@@ -170,14 +184,18 @@ class ExperimentConfig:
         experiment. Robust to opt ordering (opts are stored sorted).
 
         Fields still at their defaults that postdate existing pinned
-        goldens (`engine`, `engine_opts`) are omitted from the payload,
-        so configs that don't use them keep their historical hashes —
-        a default-engine config fingerprints identically to one built
-        before the field existed."""
+        goldens (`engine`, `engine_opts`, `fault_model`, `fault_opts`)
+        are omitted from the payload, so configs that don't use them
+        keep their historical hashes — a default-engine, faultless
+        config fingerprints identically to one built before the fields
+        existed."""
         payload_dict = dataclasses.asdict(self)
         if self.engine == "event" and not self.engine_opts:
             del payload_dict["engine"]
             del payload_dict["engine_opts"]
+        if self.fault_model == "none" and not self.fault_opts:
+            del payload_dict["fault_model"]
+            del payload_dict["fault_opts"]
         payload = json.dumps(payload_dict, sort_keys=True, default=repr)
         return hashlib.sha256(payload.encode()).hexdigest()[:12]
 
@@ -228,6 +246,14 @@ class ExperimentConfig:
         return dataclasses.replace(self, engine=engine,
                                    engine_opts=tuple(sorted(
                                        engine_opts.items())))
+
+    def with_fault_model(self, fault_model: str,
+                         **fault_opts) -> "ExperimentConfig":
+        """Same experiment, different fault injection (opts reset
+        unless given; see `repro.faults`)."""
+        return dataclasses.replace(self, fault_model=fault_model,
+                                   fault_opts=tuple(sorted(
+                                       fault_opts.items())))
 
     def with_telemetry(self, **telemetry_opts) -> "ExperimentConfig":
         """Same experiment, telemetry recording on (opts reset unless

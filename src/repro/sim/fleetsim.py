@@ -146,6 +146,11 @@ class _Shape:
     duration_s: float
     mean_out_tokens: float    # trace-wide mean output tokens/request
     gating: bool              # policy gates cores (Algorithm 2)?
+    # per-machine CPU-wait clip fed into the window means: inf (exact
+    # no-op) when faultless; duration_s under fault injection, so one
+    # dead machine's unbounded backlog/capacity ratio can't poison the
+    # fleet-mean latency windows
+    wait_cap_s: float = float("inf")
 
     @property
     def n_machines(self) -> int:
@@ -266,7 +271,8 @@ def _micro_step(xp, shape: _Shape, dyn, q, arr_row):
     cpu_backlog = todo - done
     u = done / (dt * sm)                       # busy cores (fractional)
     ov = cpu_backlog / _MEAN_TASK_S            # oversubscribed tasks
-    cpu_wait = xp.mean(cpu_backlog / xp.maximum(active * sm, _EPS))
+    cpu_wait = xp.mean(xp.minimum(
+        cpu_backlog / xp.maximum(active * sm, _EPS), shape.wait_cap_s))
 
     q2 = (pq_s, pq_n, pq_out, d_batch, d_tokens, d_pend, d_pend_tok,
           cpu_backlog)
@@ -317,23 +323,189 @@ def _gate_correction(xp, shape: _Shape, active_n, u, ov, g_now, carbon):
     return corr
 
 
-def _apply_gating(xp, corr, gated, busy_n, dvth):
+def _apply_gating(xp, corr, gated, busy_n, dvth, failed=None):
     """Vectorized `idling.apply_correction`: gate `corr` most-aged
     spare active cores (+) or wake `-corr` least-aged gated cores (-)
-    per machine, by rank selection along the core axis."""
-    n = dvth.shape[1]
-    active = ~gated
+    per machine, by rank selection along the core axis. `failed`
+    (fault layer) excludes permanently-offlined cores from both sides —
+    they are never active and must never be woken; `None` leaves the
+    selection identical to the pre-fault behavior."""
+    active = ~gated if failed is None else ~gated & ~failed
+    wakeable = gated if failed is None else gated & ~failed
     eligible = xp.sum(active, axis=1) - busy_n
     k_gate = xp.clip(corr, 0.0, xp.maximum(eligible, 0.0))
     key = xp.where(active, dvth, -np.inf)
     rank_g = xp.argsort(xp.argsort(-key, axis=1), axis=1)
     gate_new = rank_g < k_gate[:, None]
-    k_wake = xp.clip(-corr, 0.0, xp.sum(gated, axis=1))
-    keyw = xp.where(gated, dvth, np.inf)
+    k_wake = xp.clip(-corr, 0.0, xp.sum(wakeable, axis=1))
+    keyw = xp.where(wakeable, dvth, np.inf)
     rank_w = xp.argsort(xp.argsort(keyw, axis=1), axis=1)
     wake = rank_w < k_wake[:, None]
-    del n
     return (gated | gate_new) & ~wake
+
+
+def _redistribute_queues(xp, q, onset, up, P):
+    """Crash onset: move a down machine's fluid queue mass to the live
+    machines of its serving group — the fluid analog of the event
+    engine's re-dispatch — and return (q', re-dispatched request mass).
+    `onset` is the per-machine crash-onset mask for this macro period,
+    `up` the per-machine up-fraction column."""
+    (pq_s, pq_n, pq_out, d_batch, d_tokens, d_pend, d_pend_tok,
+     cpu_backlog) = q
+    live = (up > 0.5) & ~onset
+
+    def move(col, on, upm):
+        lost = xp.where(on, col, 0.0)
+        tot = xp.sum(lost)
+        n_up = xp.sum(upm)
+        share = xp.where(upm, tot / xp.maximum(n_up, 1), 0.0)
+        # nowhere to go (whole group down): keep the mass in place
+        return xp.where(n_up > 0, col - lost + share, col)
+
+    on_p, on_t = onset[:P], onset[P:]
+    up_p, up_t = live[:P], live[P:]
+    retried = (xp.sum(xp.where(on_p, pq_n, 0.0))
+               + xp.sum(xp.where(on_t, d_batch + d_pend, 0.0)))
+    q2 = (move(pq_s, on_p, up_p), move(pq_n, on_p, up_p),
+          move(pq_out, on_p, up_p), move(d_batch, on_t, up_t),
+          move(d_tokens, on_t, up_t), move(d_pend, on_t, up_t),
+          move(d_pend_tok, on_t, up_t), move(cpu_backlog, onset, live))
+    return q2, retried
+
+
+class _FleetFaults:
+    """Vectorized fault layer for the fleet engine (`repro.faults`).
+
+    The event engine applies fault decisions per machine per tick; the
+    fleet surrogate applies the same three built-in models as capacity
+    columns and masks:
+
+      machine-crash    — the crash/reboot timeline is *precomputed* from
+                         the same per-machine RNG streams
+                         (`default_rng([seed, 0xFA, mid])`, Exp(mttf)
+                         inter-arrivals): per-macro up-fraction columns
+                         scale each machine's CPU capacity, and queue
+                         mass is redistributed to live machines at each
+                         crash onset (fluid re-dispatch).
+      transient-stall  — onsets replayed from the same streams (two
+                         draws per machine per period, like the event
+                         model) into per-macro capacity multipliers:
+                         one core at `slowdown` x speed for `stall_s`.
+      guardband        — dynamic (depends on the evolving aging state):
+                         each core draws an Exp(1) failure threshold up
+                         front; per macro the cumulative hazard
+                         `hazard_per_s * period * max(over, 0)`
+                         integrates inside the scan and a core fails
+                         when it crosses its threshold (inverse-CDF
+                         sampling of the first failure under the
+                         time-varying hazard — same hazard law as the
+                         event model, without per-tick uniforms).
+                         Failed cores leave the active set permanently
+                         and freeze (like DEEP_IDLE parking).
+
+    What stays approximate: GPU queues of a down machine keep draining
+    (capacity loss is modeled in the CPU layer only), and failures land
+    at macro boundaries. Engine parity under faults is therefore NOT
+    pinned — fault experiments at fleet scale are surrogate estimates,
+    the event engine is the reference.
+    """
+
+    def __init__(self, cfg: ExperimentConfig, shape: _Shape):
+        from repro.faults import get_fault_model
+        model = get_fault_model(cfg.fault_model, **cfg.fault_options)
+        if model.name not in ("guardband", "machine-crash",
+                              "transient-stall"):
+            raise ValueError(
+                f"fleet engine cannot vectorize fault model "
+                f"{model.name!r}; run it under engine='event'")
+        M, N = shape.n_machines, shape.num_cores
+        self.period = shape.steps_per_period * shape.dt_s
+        self.kind = model.name
+        # neutral columns; the matching branch below fills its own
+        self.up_frac = np.ones((shape.n_macro, M))
+        self.onset = np.zeros((shape.n_macro, M), dtype=bool)
+        self.cap_mult = np.ones((shape.n_macro, M))
+        self.guard = None
+        self.thresh = None
+        self.n_crashes = 0
+        self.n_stalls = 0
+        self.static_lost_core_s = 0.0
+        self.windows: list[tuple[float, float]] = []
+        dur = shape.duration_s
+        rngs = [np.random.default_rng([cfg.seed, 0xFA, mid])
+                for mid in range(M)]
+        if self.kind == "guardband":
+            self.guard = (model.margin, model.hazard_per_s)
+            self.max_failed_n = float(int(model.max_failed_frac * N))
+            self.thresh = np.stack([r.exponential(1.0, size=N)
+                                    for r in rngs])
+        elif self.kind == "machine-crash":
+            for mid, rng in enumerate(rngs):
+                t = float(rng.exponential(model.mttf_s))
+                while t < dur:
+                    self.n_crashes += 1
+                    down_until = t + model.reboot_s
+                    k0 = min(int(t / self.period), shape.n_macro - 1)
+                    self.onset[k0, mid] = True
+                    k1 = min(int(min(down_until, dur) / self.period),
+                             shape.n_macro - 1)
+                    for k in range(k0, k1 + 1):
+                        lo = max(t, k * self.period)
+                        hi = min(down_until, (k + 1) * self.period, dur)
+                        if hi > lo:
+                            self.up_frac[k, mid] -= (hi - lo) / self.period
+                    self.static_lost_core_s += N * (min(down_until, dur) - t)
+                    self.windows.append((t, min(down_until, dur)))
+                    t = down_until + float(rng.exponential(model.mttf_s))
+        else:   # transient-stall
+            p = -np.expm1(-model.rate_per_s * self.period)
+            slow_loss = (1.0 - model.slowdown) / N
+            for mid, rng in enumerate(rngs):
+                for k in range(shape.n_macro):
+                    u = float(rng.random())
+                    rng.integers(N)      # core id (capacity-aggregated)
+                    if u >= p:
+                        continue
+                    self.n_stalls += 1
+                    t0 = (k + 1) * self.period
+                    t1 = min(t0 + model.stall_s, dur)
+                    k1 = min(int(t1 / self.period), shape.n_macro - 1)
+                    for kk in range(k + 1, k1 + 1):
+                        lo = max(t0, kk * self.period)
+                        hi = min(t1, (kk + 1) * self.period)
+                        if hi > lo:
+                            self.cap_mult[kk, mid] -= \
+                                (hi - lo) / self.period * slow_loss
+                    if t1 > t0:
+                        self.windows.append((t0, t1))
+
+    def robustness(self, state, completed: int, submitted: int) -> dict:
+        """Fleet-side robustness scalars (same keys the event engine's
+        `FaultCoordinator.robustness` produces)."""
+        from repro.sim.cluster import _merge_intervals
+        sh_lost = float(state.get("lost_core_s", 0.0))
+        lost = sh_lost + self.static_lost_core_s
+        core_failures = (int(state["failed"].sum())
+                         if self.guard is not None else 0)
+        widths = [hi - lo for lo, hi in _merge_intervals(self.windows)]
+        if self.guard is not None and core_failures:
+            # failures land at macro boundaries; each degrades the
+            # machine for ~one re-sizing period
+            widths.append(self.period)
+        return {
+            "core_failures": core_failures,
+            "machine_crashes": self.n_crashes,
+            "stalls": self.n_stalls,
+            "retries": int(round(float(state.get("retried", 0.0)))),
+            "failed_requests": 0,
+            "rejected_requests": 0,
+            "submitted": submitted,
+            "pending_requests": max(submitted - completed, 0),
+            "p99_degraded_window_s": (
+                float(np.percentile(np.asarray(widths), 99))
+                if widths else 0.0),
+            "_lost_core_s": lost,
+        }
 
 
 def _derived(xp, shape: _Shape, f0, dvth, gated, headroom):
@@ -416,6 +588,20 @@ class FleetEngine:
             for i in range(self.shape.n_machines)])
         self._carbon_gate = self._resolve_carbon_gate(cfg)
         self.state = _initial_state(self.shape)
+        # Fault layer (None with the default "none" model — the state
+        # dict, scan signature and physics stay exactly the pre-fault
+        # ones, so faultless runs are bit-identical on both backends).
+        self._faults = (_FleetFaults(cfg, self.shape)
+                        if cfg.fault_model != "none" else None)
+        if self._faults is not None:
+            self.shape.wait_cap_s = cfg.duration_s
+            self.state["lost_core_s"] = np.zeros(())
+            self.state["retried"] = np.zeros(())
+            if self._faults.guard is not None:
+                self.state["failed"] = np.zeros(
+                    (self.shape.n_machines, cfg.num_cores), dtype=bool)
+                self.state["cum_haz"] = np.zeros(
+                    (self.shape.n_machines, cfg.num_cores))
         self.resumed_from: int | None = None
 
     @staticmethod
@@ -487,9 +673,16 @@ class FleetEngine:
 
     def _try_resume(self) -> int:
         from repro.checkpoint import store
-        step = store.latest_step(self.checkpoint_dir)
-        if step is None:
+        if store.latest_step(self.checkpoint_dir) is None:
             return 0
+        template = {k: np.asarray(v) for k, v in self.state.items()}
+        # step=None lets the store digest-verify the newest checkpoint
+        # and fall back (with a warning) to the newest earlier step that
+        # verifies, so one torn write doesn't strand the whole run.
+        restored = store.restore(self.checkpoint_dir, template)
+        # copy: restored arrays can be read-only views of the npz buffer
+        state = {k: np.array(v) for k, v in restored.items()}
+        step = int(state["macro"])      # save() labels steps by macro
         meta = store.meta(self.checkpoint_dir, step)
         if meta.get("config") != self.cfg.fingerprint():
             raise ValueError(
@@ -497,11 +690,8 @@ class FleetEngine:
                 f"written by config {meta.get('config')!r}, not "
                 f"{self.cfg.fingerprint()!r}: refusing to resume a "
                 f"different experiment")
-        template = {k: np.asarray(v) for k, v in self.state.items()}
-        restored = store.restore(self.checkpoint_dir, template, step=step)
-        # copy: restored arrays can be read-only views of the npz buffer
-        self.state = {k: np.array(v) for k, v in restored.items()}
-        self.resumed_from = int(step)
+        self.state = state
+        self.resumed_from = step
         return int(self.state["macro"])
 
     # -- numpy driver --------------------------------------------------- #
@@ -517,10 +707,35 @@ class FleetEngine:
         spp = sh.steps_per_period
         next_ckpt = self._next_ckpt(start_macro)
         g_fn = self._carbon_gate[0].g_per_kwh if self._carbon_gate else None
+        fx = self._faults
         for k in range(start_macro, sh.n_macro):
+            gated_eff = st["gated"]
+            if fx is not None:
+                if "failed" in st:
+                    gated_eff = gated_eff | st["failed"]
+                if fx.onset[k].any():
+                    q0 = (st["pq_s"], st["pq_n"], st["pq_out"],
+                          st["d_batch"], st["d_tokens"], st["d_pend"],
+                          st["d_pend_tok"], st["cpu_backlog"])
+                    q0, retried = _redistribute_queues(
+                        xp, q0, fx.onset[k], fx.up_frac[k], P)
+                    (st["pq_s"], st["pq_n"], st["pq_out"], st["d_batch"],
+                     st["d_tokens"], st["d_pend"], st["d_pend_tok"],
+                     st["cpu_backlog"]) = q0
+                    st["retried"] = st["retried"] + retried
             f, sp, spd_t, sm, active_n = _derived(
-                xp, sh, self.f0, st["dvth"], st["gated"],
+                xp, sh, self.f0, st["dvth"], gated_eff,
                 self.params.headroom)
+            if fx is not None:
+                # capacity columns: stalls scale speed, crashes scale
+                # the live core count
+                sm = sm * fx.cap_mult[k]
+                active_n = active_n * fx.up_frac[k]
+                # a machine with no live cores has zero capacity (via
+                # active_n) but must keep a finite nominal speed for the
+                # 1/speed bookkeeping terms
+                sm = xp.where(active_n > 0, sm, f.mean(axis=1))
+                sp, spd_t = sm[:P], sm[P:]
             dyn = (sp, spd_t, sm, active_n)
             q = (st["pq_s"], st["pq_n"], st["pq_out"], st["d_batch"],
                  st["d_tokens"], st["d_pend"], st["d_pend_tok"],
@@ -553,7 +768,7 @@ class FleetEngine:
                 st["completions"] += obs["comps"]
                 # spread busy time evenly over this period's active set
                 st["busy_s"] += np.where(
-                    st["gated"], 0.0,
+                    gated_eff, 0.0,
                     (busy_cs / np.maximum(active_n, 1.0))[:, None])
             (st["pq_s"], st["pq_n"], st["pq_out"], st["d_batch"],
              st["d_tokens"], st["d_pend"], st["d_pend_tok"],
@@ -562,9 +777,25 @@ class FleetEngine:
 
             # macro boundary: settle aging, sample, gate (same order as
             # the event engine's periodic tick).
-            st["dvth"] = _settle_aging(sh, st["dvth"], st["gated"],
+            st["dvth"] = _settle_aging(sh, st["dvth"], gated_eff,
                                        st["busy_s"], self._advance_numpy)
             st["busy_s"][:] = 0.0
+            if fx is not None and fx.guard is not None:
+                margin, hazard = fx.guard
+                over = (st["dvth"] / self.params.headroom
+                        - margin) / margin
+                haz = hazard * fx.period * np.maximum(over, 0.0)
+                st["cum_haz"] = st["cum_haz"] + np.where(
+                    st["failed"], 0.0, haz)
+                cand = (st["cum_haz"] >= fx.thresh) & ~st["failed"]
+                allowed = np.maximum(
+                    fx.max_failed_n - st["failed"].sum(axis=1), 0.0)
+                key = np.where(cand, st["cum_haz"] - fx.thresh, -np.inf)
+                rank = np.argsort(np.argsort(-key, axis=1), axis=1)
+                st["failed"] = st["failed"] | (
+                    cand & (rank < allowed[:, None]))
+                st["lost_core_s"] = (st["lost_core_s"]
+                                     + st["failed"].sum() * fx.period)
             idle_norm = (active_n - u - ov) / sh.num_cores
             bins = np.clip(((idle_norm + 1.0) * 0.5
                             * (_IDLE_BINS - 1)).astype(np.int64),
@@ -579,13 +810,13 @@ class FleetEngine:
                 st["gated"] = _apply_gating(xp, corr, st["gated"],
                                             np.ceil(np.minimum(u,
                                                                active_n)),
-                                            st["dvth"])
+                                            st["dvth"],
+                                            failed=st.get("failed"))
             st["macro"] = np.asarray(k + 1, dtype=np.int64)
             if self.checkpoint_dir and k + 1 >= next_ckpt \
                     and k + 1 < sh.n_macro:
                 self._checkpoint(k + 1)
                 next_ckpt = self._next_ckpt(k + 1)
-        del P
 
     def _next_ckpt(self, macro: int) -> int:
         per = max(1, int(round(self.checkpoint_every_s
@@ -605,6 +836,11 @@ class FleetEngine:
         f0 = jnp.asarray(self.f0, jnp.float32)
         spp = sh.steps_per_period
         carbon = self._carbon_gate[1] if self._carbon_gate else None
+        # Fault columns (constants of the run; the guardband threshold
+        # crossing is the only dynamic part and lives in the carry).
+        fx = self._faults
+        guard_on = fx is not None and fx.guard is not None
+        thresh_j = jnp.asarray(fx.thresh, jnp.float32) if guard_on else None
         if self._carbon_gate:
             t_macro = (np.arange(sh.n_macro) + 1) * spp * sh.dt_s
             g_arr = np.array([self._carbon_gate[0].g_per_kwh(t)
@@ -650,24 +886,49 @@ class FleetEngine:
 
         def macro_body(carry, xs):
             st = carry
-            arr_rows, ts, g_now = xs
+            if fx is not None:
+                arr_rows, ts, g_now, up_row, onset_row, mult_row = xs
+            else:
+                arr_rows, ts, g_now = xs
+            gated_eff = (st["gated"] | st["failed"]) if guard_on \
+                else st["gated"]
             f = f0 * (1.0 - st["dvth"] / params.headroom)
-            active = ~st["gated"]
+            active = ~gated_eff
             active_n = jnp.sum(active, axis=1).astype(jnp.float32)
             sm = (jnp.sum(jnp.where(active, f, 0.0), axis=1)
                   / jnp.maximum(active_n, 1.0))
+            if fx is not None:
+                sm = sm * mult_row
+                active_n = active_n * up_row
+                sm = jnp.where(active_n > 0, sm, jnp.mean(f, axis=1))
             dyn = (sm[:sh.n_prompt], sm[sh.n_prompt:], sm, active_n)
             q = (st["pq_s"], st["pq_n"], st["pq_out"], st["d_batch"],
                  st["d_tokens"], st["d_pend"], st["d_pend_tok"],
                  st["cpu_backlog"])
+            if fx is not None:
+                q, retried = _redistribute_queues(jnp, q, onset_row,
+                                                  up_row, sh.n_prompt)
             acc = {k2: st[k2] for k2 in
                    ("mw", "res", "task_sum", "task_cnt", "task_max",
                     "completions", "busy_s")}
             (q, acc, _, _), (us, ovs) = jax.lax.scan(
-                micro_body, (q, acc, dyn, st["gated"]), (arr_rows, ts))
+                micro_body, (q, acc, dyn, gated_eff), (arr_rows, ts))
             u, ov = us[-1], ovs[-1]
-            dvth = _settle_aging(sh, st["dvth"], st["gated"],
+            dvth = _settle_aging(sh, st["dvth"], gated_eff,
                                  acc["busy_s"], advance)
+            failed = st.get("failed")
+            if guard_on:
+                margin, hazard = fx.guard
+                over = (dvth / params.headroom - margin) / margin
+                haz = hazard * fx.period * jnp.maximum(over, 0.0)
+                cum = st["cum_haz"] + jnp.where(failed, 0.0, haz)
+                cand = (cum >= thresh_j) & ~failed
+                allowed = jnp.maximum(
+                    fx.max_failed_n
+                    - jnp.sum(failed, axis=1).astype(jnp.float32), 0.0)
+                key = jnp.where(cand, cum - thresh_j, -jnp.inf)
+                rank = jnp.argsort(jnp.argsort(-key, axis=1), axis=1)
+                failed = failed | (cand & (rank < allowed[:, None]))
             idle_norm = (active_n - u - ov) / sh.num_cores
             bins = jnp.clip(((idle_norm + 1.0) * 0.5
                              * (_IDLE_BINS - 1)).astype(jnp.int32),
@@ -679,7 +940,8 @@ class FleetEngine:
                                         carbon)
                 gated = _apply_gating(
                     jnp, corr, gated,
-                    jnp.ceil(jnp.minimum(u, active_n)), dvth)
+                    jnp.ceil(jnp.minimum(u, active_n)), dvth,
+                    failed=failed)
             st = dict(st)
             st.update(acc)
             (st["pq_s"], st["pq_n"], st["pq_out"], st["d_batch"],
@@ -690,6 +952,14 @@ class FleetEngine:
             st["gated"] = gated
             st["idle_hist"] = idle_hist
             st["u_last"], st["ov_last"] = u, ov
+            if fx is not None:
+                st["retried"] = st["retried"] + retried
+                if guard_on:
+                    st["failed"] = failed
+                    st["cum_haz"] = cum
+                    st["lost_core_s"] = (
+                        st["lost_core_s"]
+                        + jnp.sum(failed).astype(jnp.float32) * fx.period)
             return st, None
 
         # pack numpy state -> f32 jax pytree (mw/res stacked for cheap
@@ -697,11 +967,13 @@ class FleetEngine:
         s = self.state
         jst = {k: jnp.asarray(v, jnp.float32)
                for k, v in s.items()
-               if k not in ("macro", "idle_hist", "gated", "mw_cnt",
-                            "mw_wait", "mw_iter", "mw_cpuw", "mw_sp",
-                            "mw_st", "mw_comps", "res_busy", "res_idle",
-                            "res_gated", "res_fbusy")}
+               if k not in ("macro", "idle_hist", "gated", "failed",
+                            "mw_cnt", "mw_wait", "mw_iter", "mw_cpuw",
+                            "mw_sp", "mw_st", "mw_comps", "res_busy",
+                            "res_idle", "res_gated", "res_fbusy")}
         jst["gated"] = jnp.asarray(s["gated"])
+        if guard_on:
+            jst["failed"] = jnp.asarray(s["failed"])
         jst["idle_hist"] = jnp.asarray(s["idle_hist"], jnp.int32)
         jst["mw"] = jnp.asarray(np.stack([
             s["mw_cnt"], s["mw_wait"], s["mw_iter"], s["mw_cpuw"],
@@ -723,7 +995,12 @@ class FleetEngine:
         while k < sh.n_macro:
             k2 = min(k + per, sh.n_macro) if self.checkpoint_dir \
                 else sh.n_macro
-            jst, _ = scan(jst, (arr_m[k:k2], ts_m[k:k2], g_m[k:k2]))
+            xs = (arr_m[k:k2], ts_m[k:k2], g_m[k:k2])
+            if fx is not None:
+                xs = xs + (jnp.asarray(fx.up_frac[k:k2], jnp.float32),
+                           jnp.asarray(fx.onset[k:k2]),
+                           jnp.asarray(fx.cap_mult[k:k2], jnp.float32))
+            jst, _ = scan(jst, xs)
             k = k2
             self._unpack_jax(jst, k)
             if self.checkpoint_dir and k < sh.n_macro:
@@ -744,6 +1021,12 @@ class FleetEngine:
         res = np.asarray(jst["res"], dtype=np.float64)
         (s["res_busy"], s["res_idle"], s["res_gated"],
          s["res_fbusy"]) = res
+        if self._faults is not None:
+            for key in ("lost_core_s", "retried", "cum_haz"):
+                if key in jst:
+                    s[key] = np.asarray(jst[key], dtype=np.float64)
+            if "failed" in jst:
+                s["failed"] = np.asarray(jst["failed"])
         s["macro"] = np.asarray(macro, dtype=np.int64)
 
     # ------------------------------------------------------------------ #
@@ -846,6 +1129,14 @@ class FleetEngine:
         idle_pcts, below = self._idle_percentiles()
         mean_lat, p99_lat, completed = self._latency_postpass()
         task_cnt = max(float(st["task_cnt"]), 1.0)
+        robustness = None
+        if self._faults is not None:
+            robustness = self._faults.robustness(
+                st, completed, len(self._requests))
+            lost = robustness.pop("_lost_core_s")
+            robustness["availability"] = 1.0 - min(
+                lost / (sh.n_machines * sh.num_cores * sh.duration_s),
+                1.0)
         result = metrics_mod.price_and_build(
             self.cfg,
             cvs=cvs, degs=degs,
@@ -859,6 +1150,7 @@ class FleetEngine:
             elapsed=sh.duration_s,
             residencies=self.residencies(),
             engine="fleet",
+            robustness=robustness,
             carbon_model=carbon_model, power_model=power_model,
             telemetry=telemetry,
         )

@@ -64,19 +64,26 @@ def collect(cluster: Cluster, cfg: ExperimentConfig,
     cvs = np.asarray(cvs)
     degs = np.asarray(degs)
     idle_all = np.asarray(idle_all) if idle_all else np.zeros(1)
-    if cluster.completed:
-        lat = np.asarray([rs.t_done - rs.t_arrival
-                          for rs in cluster.completed])
-        mean_latency = float(lat.mean())
-        p99_latency = float(np.percentile(lat, 99))
-    else:
-        # Nothing completed: report NaN, not a fabricated perfect
-        # latency of 0.0 that would rank a starved config as winning.
-        mean_latency = p99_latency = float("nan")
+    # Streaming latency aggregate (ROADMAP 1d): the cluster observed
+    # each completion as it happened; in exact mode the aggregate
+    # evaluates the same numpy expressions over the same sample order
+    # the historical per-request array did, so pinned goldens hold.
+    # When nothing completed it reports NaN, not a fabricated perfect
+    # latency of 0.0 that would rank a starved config as winning.
+    mean_latency = cluster.latency.mean()
+    p99_latency = cluster.latency.percentile(99)
     all_tasks = np.concatenate(task_samples) if task_samples else np.zeros(1)
 
     elapsed = max(m.manager.now for m in cluster.machines)
     residencies = tuple(m.manager.residency() for m in cluster.machines)
+    robustness = None
+    if cluster.faults is not None:
+        fc = cluster.faults
+        robustness = fc.robustness(elapsed)
+        # conservation residual: requests still in flight at the horizon
+        robustness["pending_requests"] = (
+            fc.submitted - cluster.completed_count
+            - fc.failed_requests - fc.rejected_requests)
     return price_and_build(
         cfg,
         cvs=cvs,
@@ -87,10 +94,11 @@ def collect(cluster: Cluster, cfg: ExperimentConfig,
         task_count_max=int(all_tasks.max()),
         mean_latency_s=mean_latency,
         p99_latency_s=p99_latency,
-        completed=len(cluster.completed),
+        completed=cluster.completed_count,
         aging_params=cluster.machines[0].manager.params,
         elapsed=elapsed,
         residencies=residencies,
+        robustness=robustness,
         per_machine_idle_norm=tuple(
             tuple(float(x) for x in m.manager.metrics.idle_norm_samples)
             for m in cluster.machines),
@@ -120,6 +128,7 @@ def price_and_build(cfg: ExperimentConfig, *,
                     per_machine_idle_norm=None,
                     per_machine_task_samples=None,
                     engine: str = "event",
+                    robustness: dict | None = None,
                     carbon_model: CarbonModel | None = None,
                     power_model: PowerModel | None = None,
                     telemetry=None) -> ExperimentResult:
@@ -204,6 +213,9 @@ def price_and_build(cfg: ExperimentConfig, *,
         per_machine_idle_norm=per_machine_idle_norm,
         per_machine_task_samples=per_machine_task_samples,
         engine=engine,
+        fault_model=cfg.fault_model,
+        fault_opts=cfg.fault_opts,
+        **(robustness or {}),
         provenance=Provenance(config_hash=cfg.fingerprint(),
                               seed=cfg.seed),
     )

@@ -172,6 +172,23 @@ class ExperimentResult:
     # event run against a fleet run, so the engine label itself must
     # not show up as a drift.
     engine: str = "event"
+    # fault-injection axis (see `repro.faults`): which fault model ran
+    # and the robustness metrics it produced. With the default "none"
+    # model every field below keeps its default and `scalars()` omits
+    # the whole block, so faultless scalar rows (and the pinned drift
+    # gate) stay byte-identical to pre-fault results.
+    fault_model: str = "none"
+    fault_opts: tuple[tuple[str, Any], ...] = ()
+    availability: float = 1.0      # 1 - lost core-seconds / capacity
+    core_failures: int = 0
+    machine_crashes: int = 0
+    stalls: int = 0
+    retries: int = 0
+    failed_requests: int = 0       # admitted, then retry budget exhausted
+    rejected_requests: int = 0     # never admitted (no live machine)
+    pending_requests: int = 0      # still in flight at the horizon
+    submitted: int = -1            # -1 = not tracked (faults off)
+    p99_degraded_window_s: float = 0.0
     provenance: Provenance | None = None
 
     # ------------------------------------------------------------------ #
@@ -195,6 +212,8 @@ class ExperimentResult:
                                  for k, v in d.get("carbon_opts", ()))
         d["power_opts"] = tuple((str(k), _tuplify(v))
                                 for k, v in d.get("power_opts", ()))
+        d["fault_opts"] = tuple((str(k), _tuplify(v))
+                                for k, v in d.get("fault_opts", ()))
         if d.get("per_machine_carbon") is not None:
             d["per_machine_carbon"] = tuple(
                 LifetimeEstimate.from_dict(e)
@@ -240,6 +259,14 @@ class ExperimentResult:
     _PCT_SHORT = (("freq_cv_percentiles", "freq_cv"),
                   ("mean_degradation_percentiles", "mean_degradation"),
                   ("idle_norm_percentiles", "idle_norm"))
+    # appended to `scalars()` only when a fault model actually ran —
+    # faultless rows must stay byte-identical (`diff_scalars` flags any
+    # new key as drift, and the pinned golden mini-grid is faultless)
+    _ROBUST_SCALARS = ("fault_model", "availability", "core_failures",
+                      "machine_crashes", "stalls", "retries",
+                      "failed_requests", "rejected_requests",
+                      "pending_requests", "submitted",
+                      "p99_degraded_window_s")
 
     def scalars(self) -> dict[str, Any]:
         """One flat row: identity + scalar metrics + flattened
@@ -249,6 +276,9 @@ class ExperimentResult:
         for field, short in self._PCT_SHORT:
             for p, v in getattr(self, field).items():
                 row[f"{short}_p{p}"] = v
+        if self.fault_model != "none":
+            for f in self._ROBUST_SCALARS:
+                row[f] = getattr(self, f)
         if self.provenance is not None:
             row["config_hash"] = self.provenance.config_hash
             row["seed"] = self.provenance.seed

@@ -123,6 +123,30 @@ class FleetView:
         """(n_token,) int — active + pending decode requests per instance."""
         return np.asarray([t.load for t in self._c.token_instances])
 
+    # -- health (fault layer) ------------------------------------------ #
+    # All-True / all-zero with the default "none" fault model; a
+    # health-aware router can weight these without breaking bit-exactness
+    # of faultless runs (it just reads constants).
+    def prompt_up(self) -> np.ndarray:
+        """(n_prompt,) bool — prompt machine is powered (not rebooting)."""
+        return np.asarray([getattr(p.machine, "up", True)
+                           for p in self._c.prompt_instances])
+
+    def token_up(self) -> np.ndarray:
+        """(n_token,) bool — token machine is powered (not rebooting)."""
+        return np.asarray([getattr(t.machine, "up", True)
+                           for t in self._c.token_instances])
+
+    def machine_up(self) -> np.ndarray:
+        """(n_machines,) bool — per-machine power state, fleet order."""
+        return np.asarray([getattr(m, "up", True)
+                           for m in self._c.machines])
+
+    def offline_cores(self) -> np.ndarray:
+        """(n_machines,) int — permanently failed cores per machine."""
+        return np.asarray([int(m.manager.failed.sum())
+                           for m in self._c.machines])
+
     # -- aging --------------------------------------------------------- #
     def _snapshot(self, machine) -> MachineAging:
         m = machine.manager

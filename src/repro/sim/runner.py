@@ -32,6 +32,7 @@ from __future__ import annotations
 
 from repro.carbon import get_carbon_model
 from repro.core.policies import canonical_policy_name
+from repro.faults.registry import canonical_fault_model_name, get_fault_model
 from repro.power import get_power_model
 from repro.power.registry import canonical_power_model_name
 from repro.sim import metrics as metrics_mod
@@ -65,6 +66,9 @@ def run_experiment(cfg: ExperimentConfig,
     carbon_model = get_carbon_model(cfg.carbon_model, **cfg.carbon_options)
     power_model = get_power_model(cfg.power_model, **cfg.power_options)
     scenario = get_scenario(cfg.scenario, **cfg.scenario_options)
+    # Fault axis fail-fast: instantiate once to validate name + opts
+    # (the cluster builds its own per-machine instances).
+    get_fault_model(cfg.fault_model, **cfg.fault_options)
     if cfg.engine == "fleet":
         # Vectorized time-stepped engine (repro.sim.fleetsim) — the
         # scale path. The event loop below stays the bit-exact
@@ -143,21 +147,24 @@ def run_policy_sweep(
     scenarios=None,
     routers=None,
     power_models=None,
+    fault_models=None,
     parallel: int | None = None,
 ) -> SweepResult:
     """Run the same experiment across policies (x scenarios x routers
-    x power models).
+    x power models x fault models).
 
-    Policies/scenarios/routers/power models are given by registry name.
-    With `scenarios=None`, `routers=None` and `power_models=None`
-    (default) the result is keyed by policy name, preserving the
-    single-axis API. Adding `scenarios=` keys by `(policy, scenario)`;
-    adding `routers=` keys by `(policy, router)`; adding
-    `power_models=` appends a power-model part; all together key by
-    `(policy, scenario, router, power_model)`. `cfg.policy_opts` /
-    `cfg.scenario_opts` / `cfg.router_opts` / `cfg.power_opts` only
-    apply to the sweep entries matching `cfg.policy` / `cfg.scenario` /
-    `cfg.router` / `cfg.power_model`.
+    Policies/scenarios/routers/power models/fault models are given by
+    registry name. With `scenarios=None`, `routers=None`,
+    `power_models=None` and `fault_models=None` (default) the result is
+    keyed by policy name, preserving the single-axis API. Adding
+    `scenarios=` keys by `(policy, scenario)`; adding `routers=` keys
+    by `(policy, router)`; adding `power_models=` appends a power-model
+    part; adding `fault_models=` appends a fault-model part; all
+    together key by `(policy, scenario, router, power_model,
+    fault_model)`. `cfg.policy_opts` / `cfg.scenario_opts` /
+    `cfg.router_opts` / `cfg.power_opts` / `cfg.fault_opts` only apply
+    to the sweep entries matching `cfg.policy` / `cfg.scenario` /
+    `cfg.router` / `cfg.power_model` / `cfg.fault_model`.
 
     `parallel=N` fans the grid's cells across a process pool of N
     workers. Every cell is an independent simulation whose seeding is
@@ -177,10 +184,12 @@ def run_policy_sweep(
     scenario_axis = scenarios is not None
     router_axis = routers is not None
     power_axis = power_models is not None
+    fault_axis = fault_models is not None
     axes = (("policy",)
             + (("scenario",) if scenario_axis else ())
             + (("router",) if router_axis else ())
-            + (("power_model",) if power_axis else ()))
+            + (("power_model",) if power_axis else ())
+            + (("fault_model",) if fault_axis else ()))
     cells: list[tuple[object, ExperimentConfig]] = []
     for s in (scenarios if scenario_axis else (cfg.scenario,)):
         s_name = canonical_scenario_name(s)
@@ -193,14 +202,20 @@ def run_policy_sweep(
                 w_name = canonical_power_model_name(w)
                 w_cfg = r_cfg if w_name == r_cfg.power_model \
                     else r_cfg.with_power_model(w_name)
-                for p in policies:
-                    run_cfg = _with_policy(w_cfg, p)
-                    key = ((run_cfg.policy,)
-                           + ((s_name,) if scenario_axis else ())
-                           + ((r_name,) if router_axis else ())
-                           + ((w_name,) if power_axis else ()))
-                    cells.append((key if len(key) > 1 else key[0],
-                                  run_cfg))
+                for fm in (fault_models if fault_axis
+                           else (cfg.fault_model,)):
+                    f_name = canonical_fault_model_name(fm)
+                    f_cfg = w_cfg if f_name == w_cfg.fault_model \
+                        else w_cfg.with_fault_model(f_name)
+                    for p in policies:
+                        run_cfg = _with_policy(f_cfg, p)
+                        key = ((run_cfg.policy,)
+                               + ((s_name,) if scenario_axis else ())
+                               + ((r_name,) if router_axis else ())
+                               + ((w_name,) if power_axis else ())
+                               + ((f_name,) if fault_axis else ()))
+                        cells.append((key if len(key) > 1 else key[0],
+                                      run_cfg))
     if parallel is not None and int(parallel) > 1 and len(cells) > 1:
         import concurrent.futures
 

@@ -335,6 +335,8 @@ def _axis_params():
     from repro.carbon import registry as carbon_reg
     from repro.core.policies import CorePolicy
     from repro.core.policies import registry as policy_reg
+    from repro.faults import registry as fault_reg
+    from repro.faults.base import FaultModel
     from repro.power import registry as power_reg
     from repro.power.base import PowerModel
     from repro.sim import routing as router_reg
@@ -354,11 +356,13 @@ def _axis_params():
                      subclass_of(CarbonModel), id="carbon"),
         pytest.param(power_reg._MODELS, "power model",
                      subclass_of(PowerModel), id="power"),
+        pytest.param(fault_reg._MODELS, "fault model",
+                     subclass_of(FaultModel), id="fault"),
     ]
 
 
 class TestRegistryParity:
-    """The five axes share `repro.registry.Registry`; their pinned error
+    """The six axes share `repro.registry.Registry`; their pinned error
     wordings must keep the same shape, byte for byte."""
 
     @pytest.mark.parametrize("reg,kind,imposter", _axis_params())

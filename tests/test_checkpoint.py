@@ -119,3 +119,70 @@ class TestRestore:
         assert set(back) == {"layer", "scale"}
         np.testing.assert_array_equal(back["layer"]["w"],
                                       tree["layer"]["w"])
+
+
+class TestCorruptionFallback:
+    """save() records each npz's sha256 + byte length in meta.json;
+    restore() verifies before loading. A corrupt *newest* checkpoint
+    falls back to the latest earlier step that verifies (warning); an
+    explicitly requested step stays strict."""
+
+    def _corrupt(self, tmp_path, step, mode="truncate"):
+        path = os.path.join(str(tmp_path), f"step_{step:08d}",
+                            "params.npz")
+        if mode == "truncate":
+            size = os.path.getsize(path)
+            with open(path, "r+b") as f:
+                f.truncate(size // 2)
+        else:       # bit flip, same length
+            with open(path, "r+b") as f:
+                f.seek(os.path.getsize(path) // 2)
+                b = f.read(1)
+                f.seek(-1, os.SEEK_CUR)
+                f.write(bytes([b[0] ^ 0xFF]))
+
+    def test_digests_recorded(self, tmp_path, params):
+        store.save(str(tmp_path), 0, params,
+                   opt_state={"m": np.zeros(3)})
+        meta = store.meta(str(tmp_path))
+        assert set(meta["digests"]) == {"params.npz", "opt_state.npz"}
+        rec = meta["digests"]["params.npz"]
+        assert len(rec["sha256"]) == 64 and rec["bytes"] > 0
+
+    @pytest.mark.parametrize("mode", ["truncate", "bitflip"])
+    def test_corrupt_newest_falls_back(self, tmp_path, params, mode):
+        store.save(str(tmp_path), 1, params)
+        newer = {k: v + 1 for k, v in params.items()}
+        store.save(str(tmp_path), 2, newer)
+        self._corrupt(tmp_path, 2, mode)
+        with pytest.warns(RuntimeWarning, match="falling back to step 1"):
+            back = store.restore(str(tmp_path), params)
+        np.testing.assert_array_equal(back["w"], params["w"])
+
+    def test_explicit_step_stays_strict(self, tmp_path, params):
+        store.save(str(tmp_path), 1, params)
+        store.save(str(tmp_path), 2, params)
+        self._corrupt(tmp_path, 2)
+        with pytest.raises(ValueError, match="failed verification"):
+            store.restore(str(tmp_path), params, step=2)
+
+    def test_all_corrupt_raises(self, tmp_path, params):
+        store.save(str(tmp_path), 1, params)
+        self._corrupt(tmp_path, 1)
+        with pytest.raises(ValueError, match="no earlier step verifies"):
+            store.restore(str(tmp_path), params)
+
+    def test_pre_digest_checkpoint_still_loads(self, tmp_path, params):
+        """Checkpoints written before digests existed (no record in
+        meta.json) load without verification, as before."""
+        import json
+        store.save(str(tmp_path), 0, params)
+        meta_path = os.path.join(str(tmp_path), "step_00000000",
+                                 "meta.json")
+        with open(meta_path) as f:
+            meta = json.load(f)
+        del meta["digests"]
+        with open(meta_path, "w") as f:
+            json.dump(meta, f)
+        back = store.restore(str(tmp_path), params)
+        np.testing.assert_array_equal(back["w"], params["w"])

@@ -1,0 +1,335 @@
+"""Fault-injection subsystem (`repro.faults` + the fault layers in
+`repro.core.manager`, `repro.sim.cluster`, `repro.sim.fleetsim`).
+
+Pins the PR's acceptance scenario — under guardband faults at a fixed
+seed/horizon, the proposed policy demonstrably fails fewer cores and
+keeps higher availability than the linux baseline — plus the request
+conservation invariant (completed + failed + rejected + pending ==
+submitted), bounded retries, the faultless bit-exactness contract
+(`fault_model="none"` builds no machinery and leaves fingerprints and
+result scalars unchanged), per-model smokes on both engines, and the
+manager/routing health surfaces.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.manager import CoreManager
+from repro.faults import (
+    FaultDecision,
+    available_fault_models,
+    canonical_fault_model_name,
+    get_fault_model,
+)
+from repro.sim import ExperimentConfig
+from repro.sim.cluster import (
+    BACKOFF_BASE_S,
+    HEDGE_TIMEOUT_S,
+    MAX_RETRIES,
+    Cluster,
+)
+from repro.sim.runner import run_experiment, run_policy_sweep
+
+# ---------------------------------------------------------------------- #
+# registry axis
+# ---------------------------------------------------------------------- #
+class TestRegistry:
+    def test_builtins_registered(self):
+        names = available_fault_models()
+        for n in ("none", "guardband", "machine-crash", "transient-stall"):
+            assert n in names
+
+    def test_canonical_name(self):
+        assert canonical_fault_model_name("Machine_Crash") == \
+            "machine-crash"
+        assert get_fault_model("GUARDBAND").name == "guardband"
+
+    def test_opts_reach_model(self):
+        m = get_fault_model("guardband", margin=0.05)
+        assert m.margin == 0.05
+
+    def test_unknown_name_raises(self):
+        with pytest.raises(KeyError, match="unknown fault model"):
+            get_fault_model("cosmic-rays")
+
+    def test_fresh_instance_per_get(self):
+        assert get_fault_model("machine-crash") is not \
+            get_fault_model("machine-crash")
+
+    def test_none_decides_nothing(self):
+        assert get_fault_model("none").periodic(None) is None
+
+    def test_decision_truthiness(self):
+        assert not FaultDecision()
+        assert FaultDecision(fail_cores=(3,))
+        assert FaultDecision(crash=True)
+
+
+# ---------------------------------------------------------------------- #
+# faultless contract: "none" is free and invisible
+# ---------------------------------------------------------------------- #
+class TestFaultlessContract:
+    def test_fingerprint_unchanged_by_default_axis(self):
+        """Pre-fault configs keep their historical hashes: the default
+        fault fields are omitted from the fingerprint payload (same
+        treatment as the engine axis), so the pinned drift-gate golden
+        survives without re-pinning."""
+        assert ExperimentConfig().fingerprint() == \
+            ExperimentConfig(fault_model="none").fingerprint()
+
+    def test_fault_fingerprint_differs(self):
+        base = ExperimentConfig()
+        assert base.with_fault_model("guardband").fingerprint() != \
+            base.fingerprint()
+        assert base.with_fault_model(
+            "guardband", margin=0.02).fingerprint() != \
+            base.with_fault_model("guardband").fingerprint()
+
+    def test_no_fault_machinery_when_off(self):
+        cluster = Cluster(ExperimentConfig(duration_s=1.0))
+        assert cluster.faults is None
+
+    def test_robustness_scalars_only_when_on(self):
+        cfg = ExperimentConfig(duration_s=20.0, n_prompt=1, n_token=2,
+                               rate_rps=8.0)
+        off = run_experiment(cfg).scalars()
+        on = run_experiment(
+            cfg.with_fault_model("transient-stall")).scalars()
+        assert "availability" not in off
+        assert "core_failures" not in off
+        assert on["availability"] <= 1.0
+        assert set(off) < set(on)
+
+    def test_unknown_fault_model_fails_fast(self):
+        with pytest.raises(KeyError, match="unknown fault model"):
+            run_experiment(
+                ExperimentConfig(fault_model="solar-flare"))
+
+
+# ---------------------------------------------------------------------- #
+# manager-level fault handling
+# ---------------------------------------------------------------------- #
+class TestManagerFaults:
+    def _mgr(self, **kw):
+        return CoreManager(8, policy="linux",
+                           rng=np.random.default_rng(0), **kw)
+
+    def test_fail_core_offlines_and_demotes(self):
+        demoted = []
+        mgr = self._mgr(on_demote=lambda tid, now, speed:
+                        demoted.append(tid))
+        mgr.assign(1, 0.0)
+        victim = mgr.core_of_task[1]
+        mgr.fail_core(victim, 1.0)
+        assert mgr.failed[victim]
+        assert demoted == [1]
+        # the failed core never gets another task
+        for tid in range(2, 12):
+            mgr.assign(tid, 1.0 + tid)
+            assert mgr.core_of_task.get(tid) != victim
+
+    def test_fail_core_idempotent(self):
+        mgr = self._mgr()
+        mgr.fail_core(2, 1.0)
+        mgr.fail_core(2, 2.0)
+        assert int(mgr.failed.sum()) == 1
+
+    def test_crash_reboot_preserves_failed_cores(self):
+        mgr = self._mgr()
+        mgr.assign(1, 0.0)
+        mgr.fail_core(5, 1.0)
+        mgr.crash(2.0)
+        assert not mgr.core_of_task
+        mgr.reboot(3.0)
+        assert mgr.failed[5]
+        # failed core stays fenced after reboot
+        for tid in range(10, 20):
+            mgr.assign(tid, 3.0 + tid)
+            assert mgr.core_of_task.get(tid) != 5
+
+    def test_stall_slows_then_clears(self):
+        mgr = self._mgr()
+        mgr.assign(1, 0.0)
+        core = mgr.core_of_task[1]
+        mgr.set_core_slowdown(core, 1.0, 0.25)
+        assert mgr._stalls[core] == 0.25
+        mgr.clear_core_slowdown(core, 2.0)
+        assert core not in mgr._stalls
+
+
+# ---------------------------------------------------------------------- #
+# routing health surface
+# ---------------------------------------------------------------------- #
+class TestFleetViewHealth:
+    def test_health_fields(self):
+        cfg = ExperimentConfig(duration_s=1.0)
+        cluster = Cluster(cfg)
+        view = cluster.fleet
+        assert view.prompt_up().all()
+        assert view.token_up().all()
+        assert view.machine_up().all()
+        assert (view.offline_cores() == 0).all()
+        cluster.machines[0].manager.fail_core(3, 0.5)
+        assert view.offline_cores()[0] == 1
+
+
+# ---------------------------------------------------------------------- #
+# event-engine fault experiments
+# ---------------------------------------------------------------------- #
+def _conserved(r) -> bool:
+    return (r.completed + r.failed_requests + r.rejected_requests
+            + r.pending_requests) == r.submitted
+
+
+_SMALL = dict(duration_s=30.0, n_prompt=1, n_token=2, rate_rps=8.0,
+              seed=3)
+
+
+class TestEventEngineFaults:
+    def test_machine_crash_smoke(self):
+        r = run_experiment(ExperimentConfig(
+            **_SMALL, fault_model="machine-crash",
+            fault_opts=(("mttf_s", 20.0), ("reboot_s", 5.0))))
+        assert r.machine_crashes > 0
+        assert r.availability < 1.0
+        assert r.retries > 0
+        assert _conserved(r)
+        assert r.p99_degraded_window_s > 0.0
+
+    def test_transient_stall_smoke(self):
+        r = run_experiment(ExperimentConfig(
+            **_SMALL, fault_model="transient-stall",
+            fault_opts=(("rate_per_s", 0.2),)))
+        assert r.stalls > 0
+        # stalls degrade service but never take capacity offline
+        assert r.availability == 1.0
+        assert r.core_failures == 0 and r.machine_crashes == 0
+        assert _conserved(r)
+
+    def test_guardband_smoke(self):
+        r = run_experiment(ExperimentConfig(
+            **_SMALL, fault_model="guardband",
+            fault_opts=(("margin", 0.010),)))
+        assert r.core_failures > 0
+        assert r.availability < 1.0
+        assert _conserved(r)
+
+    def test_retries_bounded(self):
+        r = run_experiment(ExperimentConfig(
+            **_SMALL, fault_model="machine-crash",
+            fault_opts=(("mttf_s", 15.0), ("reboot_s", 5.0))))
+        assert r.retries <= MAX_RETRIES * r.submitted
+        assert MAX_RETRIES >= 1 and BACKOFF_BASE_S > 0
+        assert HEDGE_TIMEOUT_S > 0
+
+    def test_determinism(self):
+        cfg = ExperimentConfig(**_SMALL, fault_model="machine-crash",
+                               fault_opts=(("mttf_s", 20.0),))
+        a, b = run_experiment(cfg), run_experiment(cfg)
+        assert a.scalars() == b.scalars()
+
+
+class TestGuardbandAcceptance:
+    """The PR's pinned acceptance scenario: identical silicon, identical
+    fault thresholds (the fault RNG stream is policy-independent), fixed
+    seed and horizon — the aging-aware policy must keep more cores under
+    the guardband margin than the aging-oblivious baseline."""
+
+    @pytest.fixture(scope="class")
+    def pair(self):
+        base = ExperimentConfig(seed=3, duration_s=60.0,
+                                fault_model="guardband",
+                                fault_opts=(("margin", 0.012),))
+        return (run_experiment(base.with_policy("linux")),
+                run_experiment(base.with_policy("proposed")))
+
+    def test_proposed_fails_fewer_cores(self, pair):
+        linux, proposed = pair
+        assert proposed.core_failures < linux.core_failures
+
+    def test_proposed_keeps_higher_availability(self, pair):
+        linux, proposed = pair
+        assert proposed.availability > linux.availability
+
+    def test_both_conserve_requests(self, pair):
+        for r in pair:
+            assert _conserved(r)
+
+    def test_retries_bounded(self, pair):
+        for r in pair:
+            assert r.retries <= MAX_RETRIES * r.submitted
+
+
+# ---------------------------------------------------------------------- #
+# fleet engine fault experiments
+# ---------------------------------------------------------------------- #
+class TestFleetEngineFaults:
+    def _run(self, fault_model, fault_opts=(), backend="numpy"):
+        cfg = ExperimentConfig(
+            policy="proposed", duration_s=60.0, seed=7,
+            fault_model=fault_model, fault_opts=fault_opts,
+            engine_opts=(("backend", backend),), engine="fleet")
+        return run_experiment(cfg)
+
+    def test_guardband(self):
+        r = self._run("guardband", (("margin", 0.012),))
+        assert r.core_failures > 0
+        assert r.availability < 1.0
+        assert _conserved(r)
+
+    def test_machine_crash(self):
+        r = self._run("machine-crash", (("mttf_s", 120.0),))
+        assert r.machine_crashes > 0
+        assert r.availability < 1.0
+        assert r.retries > 0
+        assert _conserved(r)
+
+    def test_transient_stall(self):
+        r = self._run("transient-stall", (("rate_per_s", 0.1),))
+        assert r.stalls > 0
+        assert r.availability == 1.0
+        assert _conserved(r)
+
+    def test_backends_agree_on_counts(self):
+        a = self._run("machine-crash", (("mttf_s", 120.0),), "numpy")
+        b = self._run("machine-crash", (("mttf_s", 120.0),), "jax")
+        # fault timelines are precomputed from the same RNG streams, so
+        # the crash count matches exactly; retried queue mass is fluid
+        # (f32 vs f64 rounding can differ by a unit)
+        assert a.machine_crashes == b.machine_crashes
+        assert abs(a.retries - b.retries) <= 1
+        assert a.availability == pytest.approx(b.availability, rel=1e-3)
+
+    def test_custom_model_rejected_by_fleet_engine(self):
+        from repro.faults import FaultModel, register_fault_model
+        from repro.faults.registry import _REGISTRY
+        from repro.sim.fleetsim import FleetEngine
+
+        @register_fault_model("test-meteor")
+        class MeteorFaults(FaultModel):
+            name = "test-meteor"
+
+        try:
+            cfg = ExperimentConfig(fault_model="test-meteor",
+                                   engine="fleet")
+            with pytest.raises(ValueError, match="cannot vectorize"):
+                FleetEngine(cfg)
+        finally:
+            _REGISTRY.pop("test-meteor", None)
+
+
+# ---------------------------------------------------------------------- #
+# sweep axis
+# ---------------------------------------------------------------------- #
+class TestSweepAxis:
+    def test_fault_axis_keys(self):
+        cfg = ExperimentConfig(duration_s=10.0, n_prompt=1, n_token=1,
+                               rate_rps=4.0)
+        sweep = run_policy_sweep(cfg, policies=("linux",),
+                                 fault_models=("none",
+                                               "transient-stall"))
+        assert set(sweep) == {("linux", "none"),
+                              ("linux", "transient-stall")}
+        assert sweep[("linux", "none")].fault_model == "none"
+        assert sweep[("linux", "transient-stall")].stalls >= 0
