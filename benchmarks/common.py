@@ -1,7 +1,8 @@
 """Shared benchmark helpers: CSV emission, experiment cache, and the
-five registry-axis CLI flags (--scenario / --router / --carbon-model /
---power-model, plus the policy grids the drivers sweep internally)
-shared by fig2/fig6/fig7/fig8, with --telemetry riding along."""
+registry-axis CLI flags (--scenario / --router / --carbon-model /
+--power-model / --fleet, plus the policy grids the drivers sweep
+internally) shared by fig2/fig6/fig7/fig8, with --telemetry riding
+along."""
 from __future__ import annotations
 
 import argparse
@@ -14,14 +15,18 @@ DEFAULT_SCENARIOS = ("conversation-poisson",)
 DEFAULT_ROUTERS = ("jsq",)
 DEFAULT_CARBON_MODELS = ("linear-extension",)
 DEFAULT_POWER_MODELS = ("flat-tdp",)
+DEFAULT_FLEETS = ("uniform",)
 
 
 def axes_epilog() -> str:
-    """--help epilog enumerating every registered name on all five
-    pluggable axes (policy / scenario / router / carbon / power), built
-    from the live registries so it can never go stale again."""
+    """--help epilog enumerating every registered name on all seven
+    pluggable axes (policy / scenario / router / carbon / power /
+    fault / hardware fleet), built from the live registries so it can
+    never go stale again."""
     from repro.carbon import available_carbon_models
     from repro.core.policies import available_policies
+    from repro.faults import available_fault_models
+    from repro.hardware import available_skus
     from repro.power import available_power_models
     from repro.sim.routing import available_routers
     from repro.workloads import available_scenarios
@@ -31,6 +36,10 @@ def axes_epilog() -> str:
         ("--router", available_routers()),
         ("--carbon-model", available_carbon_models()),
         ("--power-model", available_power_models()),
+        ("fault_model (ExperimentConfig.fault_model)",
+         available_fault_models()),
+        ("--fleet (SKUs; also 'uniform' or 'sku:count+sku:rest' specs)",
+         available_skus()),
     )
     lines = ["registry axes (see repro.registry):"]
     for flag, names in rows:
@@ -99,6 +108,20 @@ def resolve_power_models(args: argparse.Namespace) -> tuple[str, ...]:
         else DEFAULT_POWER_MODELS
 
 
+def add_fleet_arg(parser: argparse.ArgumentParser) -> None:
+    parser.add_argument(
+        "--fleet", action="append", default=None, metavar="SPEC",
+        help="hardware fleet spec: 'uniform' (bit-exact legacy "
+        "default), a SKU name for a whole-fleet SKU, or a mixed spec "
+        "like 'xeon-40c:1+epyc-64c:rest'; repeatable; default "
+        f"{DEFAULT_FLEETS[0]}. See repro.hardware.available_skus()")
+
+
+def resolve_fleets(args: argparse.Namespace) -> tuple[str, ...]:
+    return tuple(args.fleet) if getattr(args, "fleet", None) \
+        else DEFAULT_FLEETS
+
+
 def add_telemetry_arg(parser: argparse.ArgumentParser) -> None:
     parser.add_argument(
         "--telemetry", nargs="?", const="", default=None, metavar="DIR",
@@ -131,9 +154,9 @@ def parse_scenarios(description: str | None = None) -> tuple[str, ...]:
 
 def parse_axes(description: str | None = None,
                carbon: bool = False, power: bool = False,
-               telemetry: bool = False) -> tuple:
+               fleet: bool = False, telemetry: bool = False) -> tuple:
     """argparse for drivers that sweep scenarios and routers; with
-    `carbon=True` / `power=True` those accounting axes join the
+    `carbon=True` / `power=True` / `fleet=True` those axes join the
     returned tuple (in that order), and `telemetry=True` appends the
     resolved telemetry opts dict (or None)."""
     ap = _axes_parser(description)
@@ -143,12 +166,15 @@ def parse_axes(description: str | None = None,
         add_carbon_model_arg(ap)
     if power:
         add_power_model_arg(ap)
+    if fleet:
+        add_fleet_arg(ap)
     if telemetry:
         add_telemetry_arg(ap)
     args = ap.parse_args()
     axes = (resolve_scenarios(args), resolve_routers(args))
     axes += ((resolve_carbon_models(args),) if carbon else ())
     axes += ((resolve_power_models(args),) if power else ())
+    axes += ((resolve_fleets(args),) if fleet else ())
     return axes + ((resolve_telemetry(args),) if telemetry else ())
 
 

@@ -14,9 +14,12 @@ conservative `linear-extension` next to the optimistic
 `reliability-threshold`). `--power-model` (repeatable) re-prices the
 same per-core residency data under any registered `repro.power` model
 (`fleet_energy_under`, exact) — the measured-energy counterpart on the
-operational side. Each sweep's full grid is also persisted as a
-`SweepResult` JSON (energy scalars included) next to the row CSVs, so
-runs diff across commits via `SweepResult.diff_scalars`.
+operational side. `--fleet` (repeatable) re-runs the grid on any
+`repro.hardware` fleet spec (a SKU name or "sku:count+sku:rest"), so
+mixed fleets price each machine against its own SKU's embodied and TDP
+figures. Each sweep's full grid is also persisted as a `SweepResult`
+JSON (energy scalars included) next to the row CSVs, so runs diff
+across commits via `SweepResult.diff_scalars`.
 """
 from __future__ import annotations
 
@@ -24,9 +27,10 @@ import os
 
 from repro.sim import ExperimentConfig, carbon_comparison, run_policy_sweep
 
-from benchmarks.common import (DEFAULT_CARBON_MODELS, DEFAULT_POWER_MODELS,
-                               DEFAULT_ROUTERS, DEFAULT_SCENARIOS,
-                               RESULTS_DIR, emit, parse_axes)
+from benchmarks.common import (DEFAULT_CARBON_MODELS, DEFAULT_FLEETS,
+                               DEFAULT_POWER_MODELS, DEFAULT_ROUTERS,
+                               DEFAULT_SCENARIOS, RESULTS_DIR, emit,
+                               parse_axes)
 
 N_MACHINES = 22
 
@@ -35,67 +39,76 @@ def run(duration_s: float = 120.0, rates=(40, 70, 100),
         scenarios=DEFAULT_SCENARIOS, routers=DEFAULT_ROUTERS,
         carbon_models=DEFAULT_CARBON_MODELS,
         power_models=DEFAULT_POWER_MODELS,
+        fleets=DEFAULT_FLEETS,
         telemetry: dict | None = None) -> list[dict]:
     rows = []
     os.makedirs(RESULTS_DIR, exist_ok=True)
     for scenario in scenarios:
         for router in routers:
-            for rate in rates:
-                # One simulation per cell: aging is carbon-model-
-                # independent and residencies are power-model-
-                # independent, so each requested model re-prices the
-                # same saved data (`fleet_yearly_under` /
-                # `fleet_energy_under`, exact) instead of re-running
-                # the sweep. The first power model prices the persisted
-                # grid's own energy scalars.
-                cfg = ExperimentConfig(
-                    num_cores=40, rate_rps=rate, duration_s=duration_s,
-                    seed=1, scenario=scenario, router=router,
-                    power_model=power_models[0])
-                if telemetry is not None:
-                    cfg = cfg.with_telemetry(**telemetry)
-                res = run_policy_sweep(cfg)
-                res.save(os.path.join(
-                    RESULTS_DIR,
-                    f"fig7_sweep_{scenario}_{router}_r{rate}.json"))
-                for model in carbon_models:
-                    for power in power_models:
-                        for tech in ("least-aged", "proposed"):
-                            fleet_yearly = \
-                                res[tech].fleet_yearly_under(model)
-                            fleet_kwh = res[tech].fleet_energy_under(power)
-                            for pct in (99, 50):
-                                est = carbon_comparison(
-                                    res["linux"], res[tech], pct,
-                                    model=model)
-                                rows.append({
-                                    "scenario": res[tech].scenario,
-                                    "router": res[tech].router,
-                                    "carbon_model": model,
-                                    "power_model": power,
-                                    "rate_rps": rate,
-                                    "policy": tech,
-                                    "percentile": pct,
-                                    "lifetime_extension": round(
-                                        est.extension_factor, 4),
-                                    "cluster_yearly_kgco2eq": round(
-                                        N_MACHINES * est.yearly_kgco2eq, 2),
-                                    "cluster_baseline_kgco2eq": round(
-                                        N_MACHINES
-                                        * est.baseline_yearly_kgco2eq, 2),
-                                    "reduction_pct": round(
-                                        100 * est.reduction_frac, 2),
-                                    "fleet_yearly_kgco2eq": round(
-                                        fleet_yearly, 2),
-                                    "fleet_energy_kwh": round(
-                                        fleet_kwh, 6),
-                                })
+            for fleet in fleets:
+                _run_fleet(rows, duration_s, rates, scenario, router,
+                           carbon_models, power_models, fleet, telemetry)
     emit("fig7_carbon", rows)
     return rows
 
 
+def _run_fleet(rows, duration_s, rates, scenario, router, carbon_models,
+               power_models, fleet, telemetry):
+    for rate in rates:
+        # One simulation per cell: aging is carbon-model-independent
+        # and residencies are power-model-independent, so each
+        # requested model re-prices the same saved data
+        # (`fleet_yearly_under` / `fleet_energy_under`, exact) instead
+        # of re-running the sweep. The first power model prices the
+        # persisted grid's own energy scalars.
+        cfg = ExperimentConfig(
+            num_cores=40, rate_rps=rate, duration_s=duration_s,
+            seed=1, scenario=scenario, router=router,
+            power_model=power_models[0])
+        if fleet != "uniform":
+            cfg = cfg.with_fleet(fleet)
+        if telemetry is not None:
+            cfg = cfg.with_telemetry(**telemetry)
+        res = run_policy_sweep(cfg)
+        tag = "" if fleet == "uniform" else f"_{fleet.replace(':', '-')}"
+        res.save(os.path.join(
+            RESULTS_DIR,
+            f"fig7_sweep_{scenario}_{router}{tag}_r{rate}.json"))
+        for model in carbon_models:
+            for power in power_models:
+                for tech in ("least-aged", "proposed"):
+                    fleet_yearly = res[tech].fleet_yearly_under(model)
+                    fleet_kwh = res[tech].fleet_energy_under(power)
+                    for pct in (99, 50):
+                        est = carbon_comparison(
+                            res["linux"], res[tech], pct, model=model)
+                        rows.append({
+                            "scenario": res[tech].scenario,
+                            "router": res[tech].router,
+                            "carbon_model": model,
+                            "power_model": power,
+                            "fleet": fleet,
+                            "rate_rps": rate,
+                            "policy": tech,
+                            "percentile": pct,
+                            "lifetime_extension": round(
+                                est.extension_factor, 4),
+                            "cluster_yearly_kgco2eq": round(
+                                N_MACHINES * est.yearly_kgco2eq, 2),
+                            "cluster_baseline_kgco2eq": round(
+                                N_MACHINES
+                                * est.baseline_yearly_kgco2eq, 2),
+                            "reduction_pct": round(
+                                100 * est.reduction_frac, 2),
+                            "fleet_yearly_kgco2eq": round(
+                                fleet_yearly, 2),
+                            "fleet_energy_kwh": round(fleet_kwh, 6),
+                        })
+
+
 if __name__ == "__main__":
-    scenarios, routers, carbon_models, power_models, telemetry = \
-        parse_axes(__doc__, carbon=True, power=True, telemetry=True)
+    scenarios, routers, carbon_models, power_models, fleets, telemetry = \
+        parse_axes(__doc__, carbon=True, power=True, fleet=True,
+                   telemetry=True)
     run(scenarios=scenarios, routers=routers, carbon_models=carbon_models,
-        power_models=power_models, telemetry=telemetry)
+        power_models=power_models, fleets=fleets, telemetry=telemetry)

@@ -1,0 +1,160 @@
+"""Fleet-refresh planning: replace vs extend, priced per hardware SKU.
+
+For every catalog SKU (`repro.hardware`) this driver runs a short
+uniform fleet of that SKU, measures the NBTI degradation its host CPUs
+actually accumulate under the proposed management policy, and asks each
+registered `repro.carbon` model how long the silicon will last
+(`model.lifetime` — the SKU's own Boavizta-style embodied figure and
+baseline lifespan are priced in via `repro.hardware.sku_carbon_model`).
+From that it builds the forward-looking decision curve a fleet owner
+faces at refresh time, in kgCO2eq per core of serving capacity:
+
+  extend   — keep the aged SKU: its embodied carbon is sunk, so the
+             curve is its operational carbon (TDP x utilization x grid
+             intensity) until the model's extended lifetime runs out,
+             then a forced replacement (newest SKU's embodied lump +
+             its operational rate) for the remaining horizon.
+  replace  — buy the newest-generation SKU now: its embodied carbon
+             lands as a lump at year 0, then its (lower, per-core)
+             operational rate.
+
+The crossover year — the first planning year where replacing is
+cumulatively cheaper than extending — is the replace-vs-extend verdict,
+and it moves with the carbon model: an optimistic lifetime model
+(`reliability-threshold`) stretches the extend branch, a conservative
+one (`linear-extension`) shortens it. Emits one row per
+(sku, carbon_model, year) plus per-cell summary columns via the shared
+benchmark emitter (`experiments/refresh_planning[_mini].json`).
+
+    PYTHONPATH=src python benchmarks/refresh_planning.py          # full
+    PYTHONPATH=src python benchmarks/refresh_planning.py --mini   # CI
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+from benchmarks import common
+from repro.carbon import available_carbon_models
+from repro.carbon.intensity import ConstantIntensity
+from repro.hardware import available_skus, get_sku
+from repro.hardware.inventory import sku_carbon_model
+from repro.sim import ExperimentConfig, run_experiment
+
+#: assumed average CPU utilization for the operational branches
+UTILIZATION = 0.5
+HOURS_PER_YEAR = 8760.0
+
+
+def _op_kg_per_core_year(sku, g_per_kwh: float) -> float:
+    """Operational kgCO2eq per core-year at the assumed utilization."""
+    kwh = sku.cpu_tdp_w / sku.num_cores * UTILIZATION \
+        * HOURS_PER_YEAR / 1000.0
+    return kwh * g_per_kwh / 1000.0
+
+
+def _measured_degradation(sku_name: str, duration_s: float,
+                          rate_rps: float, seed: int) -> tuple:
+    """Mean per-machine degradation of a short uniform fleet of this
+    SKU under the proposed policy (the management the paper studies)."""
+    cfg = ExperimentConfig(duration_s=duration_s, rate_rps=rate_rps,
+                           seed=seed, n_prompt=1, n_token=2,
+                           policy="proposed", fleet=sku_name)
+    res = run_experiment(cfg)
+    deg = float(np.mean(res.per_machine_degradation))
+    return max(deg, 0.0), res
+
+
+def curves(sku, newest, est, g_per_kwh: float,
+           horizon_years: int) -> list[dict]:
+    """Cumulative replace-vs-extend rows for one (sku, model) cell."""
+    op_old = _op_kg_per_core_year(sku, g_per_kwh)
+    op_new = _op_kg_per_core_year(newest, g_per_kwh)
+    emb_new = newest.embodied_kg / newest.num_cores
+    life_ext = est.extended_life_years
+    rows = []
+    crossover = None
+    for year in range(1, horizon_years + 1):
+        if year <= life_ext:
+            extend = op_old * year
+        else:
+            # the extended silicon died: forced refresh mid-plan
+            extend = (op_old * life_ext + emb_new
+                      + op_new * (year - life_ext))
+        replace = emb_new + op_new * year
+        if crossover is None and replace <= extend:
+            crossover = year
+        rows.append({"year": year,
+                     "extend_kgco2eq_per_core": round(extend, 4),
+                     "replace_kgco2eq_per_core": round(replace, 4)})
+    for row in rows:
+        row["crossover_year"] = crossover
+    return rows
+
+
+def run(mini: bool = False, carbon_models=None,
+        horizon_years: int = 8, intensity_g_per_kwh: float | None = None,
+        seed: int = 0) -> list[dict]:
+    models = tuple(carbon_models or available_carbon_models())
+    g = (intensity_g_per_kwh if intensity_g_per_kwh is not None
+         else ConstantIntensity().mean_g_per_kwh())
+    duration = 8.0 if mini else 60.0
+    rate = 20.0 if mini else 40.0
+    skus = {name: get_sku(name) for name in available_skus()}
+    newest = max(skus.values(), key=lambda s: (s.launch_year, s.generation))
+    rows: list[dict] = []
+    for name, sku in skus.items():
+        deg, res = _measured_degradation(name, duration, rate, seed)
+        for model_name in models:
+            model = sku_carbon_model(sku, model_name, {})
+            est = model.lifetime(res.deg_reference, deg)
+            for row in curves(sku, newest, est, g, horizon_years):
+                rows.append({
+                    "sku": name,
+                    "generation": sku.generation,
+                    "launch_year": sku.launch_year,
+                    "carbon_model": model_name,
+                    "measured_degradation_ghz": round(deg, 6),
+                    "extension_factor": round(est.extension_factor, 4),
+                    "extended_life_years": round(
+                        est.extended_life_years, 3),
+                    "embodied_kgco2eq": round(sku.embodied_kg, 2),
+                    "newest_sku": max(
+                        skus, key=lambda n: (skus[n].launch_year,
+                                             skus[n].generation)),
+                    **row,
+                })
+    common.emit("refresh_planning_mini" if mini else "refresh_planning",
+                rows)
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0],
+        epilog=common.axes_epilog(),
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    common.add_carbon_model_arg(ap)
+    ap.add_argument("--mini", action="store_true",
+                    help="CI smoke: 8 s sims, same curve structure")
+    ap.add_argument("--horizon", type=int, default=8,
+                    help="planning horizon in years (default 8)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    models = (tuple(args.carbon_model) if args.carbon_model
+              else available_carbon_models())
+    rows = run(mini=args.mini, carbon_models=models,
+               horizon_years=args.horizon, seed=args.seed)
+    cells = {(r["sku"], r["carbon_model"]) for r in rows}
+    if not rows or any(r["replace_kgco2eq_per_core"] <= 0 for r in rows):
+        print("refresh planning: degenerate curves", file=sys.stderr)
+        return 1
+    print(f"refresh planning OK: {len(rows)} rows across "
+          f"{len(cells)} (sku x carbon model) cells")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,6 +4,7 @@
   fig6  — aging-effect management vs baselines (paper Fig. 6)
   fig7  — yearly embodied carbon reduction (paper Fig. 7)
   fig8  — idle-core utilization / oversubscription (paper Fig. 8)
+  refresh — replace-vs-extend fleet-refresh curves per hardware SKU
   kern  — kernel microbenches + TPU roofline occupancy
   (roofline terms per arch x shape come from the dry-run: see
    `python -m repro.launch.dryrun --all --out experiments/dryrun` and
@@ -19,23 +20,26 @@ import sys
 
 
 def main() -> None:
-    from benchmarks.common import (add_carbon_model_arg,
+    from benchmarks.common import (add_carbon_model_arg, add_fleet_arg,
                                    add_power_model_arg, add_router_arg,
                                    add_scenario_arg, add_telemetry_arg,
                                    axes_epilog, resolve_carbon_models,
-                                   resolve_power_models, resolve_routers,
-                                   resolve_scenarios, resolve_telemetry)
+                                   resolve_fleets, resolve_power_models,
+                                   resolve_routers, resolve_scenarios,
+                                   resolve_telemetry)
     ap = argparse.ArgumentParser(
         epilog=axes_epilog(),
         formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--quick", action="store_true",
                     help="short traces (CI); full runs match the paper")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig1,fig2,fig6,fig7,fig8,kern,ablations")
+                    help="comma list: fig1,fig2,fig6,fig7,fig8,kern,"
+                    "ablations,refresh")
     add_scenario_arg(ap)
     add_router_arg(ap)
     add_carbon_model_arg(ap)
     add_power_model_arg(ap)
+    add_fleet_arg(ap)
     add_telemetry_arg(ap)
     args = ap.parse_args()
     dur = 30.0 if args.quick else 120.0
@@ -44,6 +48,7 @@ def main() -> None:
     routers = resolve_routers(args)
     carbon_models = resolve_carbon_models(args)
     power_models = resolve_power_models(args)
+    fleets = resolve_fleets(args)
     telemetry = resolve_telemetry(args)
 
     def want(name: str) -> bool:
@@ -51,7 +56,8 @@ def main() -> None:
 
     from benchmarks import (ablations, fig1_motivation,
                             fig2_task_distribution, fig6_aging_effects,
-                            fig7_carbon, fig8_idle_cores, kernel_micro)
+                            fig7_carbon, fig8_idle_cores, kernel_micro,
+                            refresh_planning)
 
     if want("fig1"):
         fig1_motivation.run()
@@ -63,10 +69,14 @@ def main() -> None:
     if want("fig7"):
         fig7_carbon.run(duration_s=dur, scenarios=scenarios,
                         routers=routers, carbon_models=carbon_models,
-                        power_models=power_models, telemetry=telemetry)
+                        power_models=power_models, fleets=fleets,
+                        telemetry=telemetry)
     if want("fig8"):
         fig8_idle_cores.run(duration_s=dur, scenarios=scenarios,
                             routers=routers)
+    if want("refresh"):
+        refresh_planning.run(mini=args.quick,
+                             carbon_models=carbon_models)
     if want("kern"):
         kernel_micro.run()
     if want("ablations") and not args.quick:

@@ -131,6 +131,7 @@ def main() -> int:
         epilog=common.axes_epilog(),
         formatter_class=argparse.RawDescriptionHelpFormatter)
     common.add_scenario_arg(ap)
+    common.add_fleet_arg(ap)
     ap.add_argument("--mini", action="store_true",
                     help="CI mini-grid: 1+2-machine fleet, 30 s horizon, "
                     "fault opts tuned to fire at that scale")
@@ -139,6 +140,7 @@ def main() -> int:
     ap.add_argument("--seed", type=int, default=3)
     args = ap.parse_args()
     scenarios = common.resolve_scenarios(args)
+    fleets = common.resolve_fleets(args)
 
     if args.mini:
         cfg = ExperimentConfig(duration_s=args.duration or 30.0,
@@ -149,6 +151,11 @@ def main() -> int:
         cfg = ExperimentConfig(duration_s=args.duration or 60.0,
                                seed=args.seed)
         specs = FAULT_SPECS
+    if fleets != ("uniform",):
+        if len(fleets) != 1:
+            ap.error("--fleet takes a single spec for the tournament "
+                     "(the scoreboard compares policies, not fleets)")
+        cfg = cfg.with_fleet(fleets[0])
 
     rows = run_tournament(cfg, scenarios, specs)
     print_tables(rows)

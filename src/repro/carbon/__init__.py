@@ -33,8 +33,9 @@ from repro.carbon.base import (BASELINE_LIFESPAN_YEARS, CPU_EMBODIED_KGCO2EQ,
                                LifetimeEstimate, MAX_EXTENSION_FACTOR,
                                MIN_EXTENSION_FACTOR)
 from repro.carbon.intensity import (CarbonIntensity, ConstantIntensity,
-                                    DiurnalIntensity, TraceIntensity,
-                                    WORLD_AVG_G_PER_KWH, get_intensity)
+                                    DiurnalIntensity, ShiftedIntensity,
+                                    TraceIntensity, WORLD_AVG_G_PER_KWH,
+                                    get_intensity)
 # Importing the module registers the built-in model library.
 from repro.carbon.models import (CarbonEstimate, GPU_EMBODIED_KGCO2EQ,
                                  HOURS_PER_YEAR, LinearExtensionModel,
@@ -53,7 +54,8 @@ __all__ = [
     "BASELINE_LIFESPAN_YEARS", "CPU_EMBODIED_KGCO2EQ",
     "MAX_EXTENSION_FACTOR", "MIN_EXTENSION_FACTOR",
     "CarbonEstimate", "CarbonFootprint", "CarbonIntensity", "CarbonModel",
-    "ConstantIntensity", "DiurnalIntensity", "TraceIntensity",
+    "ConstantIntensity", "DiurnalIntensity", "ShiftedIntensity",
+    "TraceIntensity",
     "LifetimeEstimate", "LinearExtensionModel", "OperationalEmbodiedModel",
     "ReliabilityThresholdModel", "WORLD_AVG_G_PER_KWH",
     "GPU_EMBODIED_KGCO2EQ", "HOURS_PER_YEAR", "NBTI_TIME_EXPONENT",

@@ -59,6 +59,28 @@ class ConstantIntensity(CarbonIntensity):
 
 
 @dataclasses.dataclass(frozen=True)
+class ShiftedIntensity(CarbonIntensity):
+    """`base` evaluated at `t + t0_s` — a timezone/phase offset.
+
+    Fleets spanning regions see the same diurnal shape at different
+    local phases; `FleetInventory` rows carry a per-machine `t0_s` and
+    pricing wraps the configured signal per machine. The time-weighted
+    mean is shift-invariant, so amortized yearly estimates are
+    unchanged — only *when* the operational carbon lands moves.
+    """
+
+    base: CarbonIntensity = dataclasses.field(
+        default_factory=lambda: ConstantIntensity())
+    t0_s: float = 0.0
+
+    def g_per_kwh(self, t_s: float) -> float:
+        return self.base.g_per_kwh(t_s + self.t0_s)
+
+    def mean_g_per_kwh(self) -> float:
+        return self.base.mean_g_per_kwh()
+
+
+@dataclasses.dataclass(frozen=True)
 class DiurnalIntensity(CarbonIntensity):
     """Sinusoidal day/night swing around a mean intensity.
 

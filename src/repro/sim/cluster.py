@@ -26,7 +26,8 @@ from repro.core import OVERSUBSCRIBED, CoreManager
 from repro.faults import FaultView, get_fault_model
 from repro.sim.config import ExperimentConfig
 from repro.sim.events import EventQueue
-from repro.sim.fleetstate import FleetAgingSettler
+from repro.hardware.inventory import resolve_fleet
+from repro.sim.fleetstate import FleetAgingSettler, GroupedAgingSettler
 from repro.sim.latency import LatencyAggregate
 from repro.sim.routing import FleetView, get_router
 from repro.sim.tasks import TASK_DURATIONS_S, TaskIdAllocator
@@ -63,17 +64,28 @@ class Machine:
 
     def __init__(self, machine_id: int, cfg: ExperimentConfig,
                  queue: EventQueue, task_ids: TaskIdAllocator | None = None,
-                 telemetry=None, track_inflight: bool = False):
+                 telemetry=None, track_inflight: bool = False, hw=None):
         self.machine_id = machine_id
         self.queue = queue
+        # Heterogeneous fleets (`repro.hardware`): `hw` is this
+        # machine's resolved `HardwareSKU`, or None on the uniform
+        # default — which passes CoreManager exactly the historical
+        # arguments (bit-exact).
+        self.sku = hw
+        hw_kwargs = {} if hw is None else {
+            "aging_params": hw.aging_params(),
+            "variation_params": hw.variation_params(),
+        }
         # Cluster-shared id stream (falls back to a private one so a
         # Machine can still be built standalone in tests/examples).
         self.task_ids = task_ids if task_ids is not None else TaskIdAllocator()
         # Each machine instantiates its own policy from the registry name
         # (policies carry per-server state and cannot be shared).
         self.manager = CoreManager(
-            cfg.num_cores, policy=cfg.policy,
+            cfg.num_cores if hw is None else hw.num_cores,
+            policy=cfg.policy,
             policy_opts=cfg.policy_options,
+            **hw_kwargs,
             rng=np.random.default_rng(cfg.seed * 1000 + machine_id),
             idling_period_s=cfg.idling_period_s,
             on_promote=self._on_promote,
@@ -442,6 +454,7 @@ class FaultCoordinator:
         if not up:
             self._retry(rs, "no-prompt-machine-up")
             return
+        c.pending_request = rs.req
         idx = c._route(c.router.select_prompt, len(pis), "prompt")
         if not pis[idx].machine.up:
             # Health-aware failover: the router chose a down machine;
@@ -504,6 +517,7 @@ class FaultCoordinator:
         if not up:
             self._retry(rs, "no-token-machine-up")
             return
+        c.pending_request = rs.req
         idx = c._route(c.router.select_token, len(tis), "token")
         if not tis[idx].machine.up:
             loads = c.fleet.token_loads()
@@ -622,7 +636,10 @@ class FaultCoordinator:
         """Robustness scalars for `ExperimentResult` (keys match field
         names; `pending_requests` is derived by the caller)."""
         cfg = self.cfg
-        total = cfg.n_machines * cfg.num_cores * max(elapsed_s, 1e-9)
+        n_cores = (cfg.n_machines * cfg.num_cores
+                   if self.cluster.inventory is None
+                   else self.cluster.inventory.total_cores)
+        total = n_cores * max(elapsed_s, 1e-9)
         widths = [hi - lo for lo, hi in _merge_intervals(self._degraded)]
         return {
             "availability": 1.0 - min(self.lost_core_s / total, 1.0),
@@ -657,9 +674,16 @@ class Cluster:
         # manager's oversubscription FIFO relies on.
         self.task_ids = TaskIdAllocator()
         faults_on = cfg.fault_model != "none"
+        # Heterogeneous fleets (`repro.hardware`): None on the uniform
+        # default — every machine then builds with the historical
+        # homogeneous arguments, bit-exactly.
+        self.inventory = resolve_fleet(cfg.fleet, cfg.fleet_options,
+                                       cfg.n_machines)
         self.machines = [
             Machine(i, cfg, self.queue, self.task_ids,
-                    telemetry=self.telemetry, track_inflight=faults_on)
+                    telemetry=self.telemetry, track_inflight=faults_on,
+                    hw=(None if self.inventory is None
+                        else self.inventory.skus[i]))
             for i in range(cfg.n_machines)
         ]
         self.prompt_instances = [PromptInstance(m)
@@ -686,10 +710,20 @@ class Cluster:
             self._s_prompt_depth = tel.get_series("fleet/prompt_queue_depth")
             self._s_decode_load = tel.get_series("fleet/decode_load")
             self._s_cpu_tasks = tel.get_series("fleet/cpu_tasks")
+        # Pending-request hook for size-aware routers: set immediately
+        # before every `_route` call so `FleetView` can expose the
+        # routed request's token counts (None outside routing).
+        self.pending_request = None
         # Periodic ticks settle all machines' cores through one stacked
         # advance (numpy backend: bit-identical to per-machine settle_all).
-        self.fleet_settler = FleetAgingSettler(
-            [m.manager for m in self.machines])
+        # Mixed fleets group managers by (AgingParams, num_cores) and run
+        # one stacked settler per homogeneous group.
+        if self.inventory is None:
+            self.fleet_settler = FleetAgingSettler(
+                [m.manager for m in self.machines])
+        else:
+            self.fleet_settler = GroupedAgingSettler(
+                [m.manager for m in self.machines])
         # Fault layer: None with the default "none" model — every
         # faultless code path below checks `self.faults is not None`
         # exactly once and otherwise runs the historical bit-exact logic.
@@ -719,6 +753,7 @@ class Cluster:
     def submit_request(self, req: Request) -> None:
         rs = RequestState(req, remaining=req.output_tokens,
                           t_arrival=self.queue.now)
+        self.pending_request = req
         if self.faults is not None:
             self.faults.submit(rs)
             return
@@ -727,6 +762,7 @@ class Cluster:
         pi.enqueue(rs, self._prefill_done)
 
     def _prefill_done(self, rs: RequestState) -> None:
+        self.pending_request = rs.req
         if self.faults is not None:
             self.faults.prefill_done(rs)
             return

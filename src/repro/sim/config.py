@@ -27,9 +27,21 @@ from typing import Any, Mapping
 from repro.carbon.registry import canonical_carbon_model_name
 from repro.core.policies import canonical_policy_name
 from repro.faults.registry import canonical_fault_model_name
+from repro.hardware.inventory import canonical_fleet_name
 from repro.power.registry import canonical_power_model_name
 from repro.sim.routing import canonical_router_name
 from repro.workloads import canonical_scenario_name
+
+
+def _deep_freeze(value):
+    """Hashable mirror of nested opts: mappings become sorted item
+    tuples, sequences become tuples (fleet rows carry nested opts)."""
+    if isinstance(value, Mapping):
+        return tuple(sorted((str(k), _deep_freeze(v))
+                            for k, v in value.items()))
+    if isinstance(value, (list, tuple)):
+        return tuple(_deep_freeze(v) for v in value)
+    return value
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,6 +95,15 @@ class ExperimentConfig:
     # omitted from `fingerprint()` so historical hashes survive.
     fault_model: str = "none"
     fault_opts: tuple[tuple[str, Any], ...] = ()
+    # fleet hardware composition (see `repro.hardware` — the seventh
+    # axis). "uniform" (the default) keeps every machine on the
+    # implicit reference SKU with `num_cores` cores: bit-exact with
+    # pre-hardware behavior and omitted from `fingerprint()` so
+    # historical hashes survive. Other specs: a catalog SKU name, a
+    # "sku:count+sku:count" string, or "mixed" with
+    # `fleet_opts={"rows": ((sku, count, opts?), ...)}`.
+    fleet: str = "uniform"
+    fleet_opts: tuple[tuple[str, Any], ...] = ()
     # streaming telemetry (repro.telemetry): False = zero-cost off.
     # `telemetry_opts` carries TelemetryHub options (window_s,
     # max_events, max_windows, timeline_every, timeline_maxlen) plus the
@@ -108,6 +129,8 @@ class ExperimentConfig:
                            canonical_power_model_name(self.power_model))
         object.__setattr__(self, "fault_model",
                            canonical_fault_model_name(self.fault_model))
+        object.__setattr__(self, "fleet",
+                           canonical_fleet_name(self.fleet))
         for field in ("policy_opts", "scenario_opts", "router_opts",
                       "carbon_opts", "power_opts", "telemetry_opts",
                       "engine_opts", "fault_opts"):
@@ -115,6 +138,14 @@ class ExperimentConfig:
             if isinstance(opts, Mapping):
                 opts = opts.items()
             object.__setattr__(self, field, tuple(sorted(opts)))
+        # fleet_opts may nest row tuples with their own opts dicts —
+        # deep-freeze so the config stays hashable.
+        fopts = self.fleet_opts
+        if isinstance(fopts, Mapping):
+            fopts = fopts.items()
+        object.__setattr__(self, "fleet_opts",
+                           tuple(sorted((str(k), _deep_freeze(v))
+                                        for k, v in fopts)))
         if self.num_cores < 1:
             raise ValueError(f"num_cores must be >= 1, got {self.num_cores}")
         if self.n_prompt < 1 or self.n_token < 1:
@@ -162,6 +193,11 @@ class ExperimentConfig:
         return dict(self.fault_opts)
 
     @property
+    def fleet_options(self) -> dict[str, Any]:
+        """`fleet_opts` as a plain kwargs dict (rows stay tuples)."""
+        return dict(self.fleet_opts)
+
+    @property
     def telemetry_options(self) -> dict[str, Any]:
         """`telemetry_opts` as a plain kwargs dict."""
         return dict(self.telemetry_opts)
@@ -184,8 +220,9 @@ class ExperimentConfig:
         experiment. Robust to opt ordering (opts are stored sorted).
 
         Fields still at their defaults that postdate existing pinned
-        goldens (`engine`, `engine_opts`, `fault_model`, `fault_opts`)
-        are omitted from the payload, so configs that don't use them
+        goldens (`engine`, `engine_opts`, `fault_model`, `fault_opts`,
+        `fleet`, `fleet_opts`) are omitted from the payload, so configs
+        that don't use them
         keep their historical hashes — a default-engine, faultless
         config fingerprints identically to one built before the fields
         existed."""
@@ -196,6 +233,9 @@ class ExperimentConfig:
         if self.fault_model == "none" and not self.fault_opts:
             del payload_dict["fault_model"]
             del payload_dict["fault_opts"]
+        if self.fleet == "uniform" and not self.fleet_opts:
+            del payload_dict["fleet"]
+            del payload_dict["fleet_opts"]
         payload = json.dumps(payload_dict, sort_keys=True, default=repr)
         return hashlib.sha256(payload.encode()).hexdigest()[:12]
 
@@ -254,6 +294,13 @@ class ExperimentConfig:
         return dataclasses.replace(self, fault_model=fault_model,
                                    fault_opts=tuple(sorted(
                                        fault_opts.items())))
+
+    def with_fleet(self, fleet: str, **fleet_opts) -> "ExperimentConfig":
+        """Same experiment, different hardware composition (opts reset
+        unless given; see `repro.hardware`)."""
+        return dataclasses.replace(self, fleet=fleet,
+                                   fleet_opts=tuple(sorted(
+                                       fleet_opts.items())))
 
     def with_telemetry(self, **telemetry_opts) -> "ExperimentConfig":
         """Same experiment, telemetry recording on (opts reset unless

@@ -64,6 +64,7 @@ from typing import Any
 import numpy as np
 
 from repro.core import aging, temperature, variation
+from repro.hardware.inventory import resolve_fleet
 from repro.power.residency import StateResidency
 from repro.sim import metrics as metrics_mod
 from repro.sim.cluster import (
@@ -151,10 +152,22 @@ class _Shape:
     # dead machine's unbounded backlog/capacity ratio can't poison the
     # fleet-mean latency windows
     wait_cap_s: float = float("inf")
+    # per-machine core counts for heterogeneous fleets
+    # (`repro.hardware`): None = uniform legacy fleet (`num_cores`
+    # everywhere, zero ragged bookkeeping); otherwise a fleet-order
+    # tuple and `num_cores` is the padded max — lanes beyond a
+    # machine's count are excluded everywhere via a pad mask.
+    core_counts: tuple | None = None
 
     @property
     def n_machines(self) -> int:
         return self.n_prompt + self.n_token
+
+    @property
+    def total_cores(self) -> int:
+        if self.core_counts is None:
+            return self.n_machines * self.num_cores
+        return int(sum(self.core_counts))
 
 
 def _initial_state(shape: _Shape) -> dict[str, np.ndarray]:
@@ -304,11 +317,14 @@ def _settle_aging(shape: _Shape, dvth, gated, busy_s, advance):
     return dvth
 
 
-def _gate_correction(xp, shape: _Shape, active_n, u, ov, g_now, carbon):
+def _gate_correction(xp, shape: _Shape, active_n, u, ov, g_now, carbon,
+                     n_vec=None):
     """Vectorized Algorithm 2 reaction (`idling.core_correction`), with
-    the optional carbon-aware temporal reshaping."""
-    N = shape.num_cores
-    tasks = xp.minimum(float(N), u + ov)
+    the optional carbon-aware temporal reshaping. `n_vec` (ragged
+    fleets) supplies per-machine core counts; None keeps the uniform
+    scalar `shape.num_cores`."""
+    N = shape.num_cores if n_vec is None else n_vec
+    tasks = xp.minimum(N * 1.0, u + ov)
     e = (active_n - tasks) / N
     f = xp.where(e >= 0.0, xp.tan(0.785 * e), xp.arctan(1.55 * e))
     corr = xp.trunc(N * f)
@@ -419,6 +435,9 @@ class _FleetFaults:
                 f"fleet engine cannot vectorize fault model "
                 f"{model.name!r}; run it under engine='event'")
         M, N = shape.n_machines, shape.num_cores
+        # per-machine core counts (ragged fleets; uniform otherwise)
+        counts = ([N] * M if shape.core_counts is None
+                  else list(shape.core_counts))
         self.period = shape.steps_per_period * shape.dt_s
         self.kind = model.name
         # neutral columns; the matching branch below fills its own
@@ -436,9 +455,19 @@ class _FleetFaults:
                 for mid in range(M)]
         if self.kind == "guardband":
             self.guard = (model.margin, model.hazard_per_s)
-            self.max_failed_n = float(int(model.max_failed_frac * N))
-            self.thresh = np.stack([r.exponential(1.0, size=N)
-                                    for r in rngs])
+            if shape.core_counts is None:
+                self.max_failed_n = float(int(model.max_failed_frac * N))
+                self.thresh = np.stack([r.exponential(1.0, size=N)
+                                        for r in rngs])
+            else:
+                # per-machine failure budgets; padded lanes get an
+                # infinite threshold so they can never fail
+                self.max_failed_n = np.array(
+                    [float(int(model.max_failed_frac * n))
+                     for n in counts])
+                self.thresh = np.full((M, N), np.inf)
+                for mid, (r, n) in enumerate(zip(rngs, counts)):
+                    self.thresh[mid, :n] = r.exponential(1.0, size=n)
         elif self.kind == "machine-crash":
             for mid, rng in enumerate(rngs):
                 t = float(rng.exponential(model.mttf_s))
@@ -454,13 +483,14 @@ class _FleetFaults:
                         hi = min(down_until, (k + 1) * self.period, dur)
                         if hi > lo:
                             self.up_frac[k, mid] -= (hi - lo) / self.period
-                    self.static_lost_core_s += N * (min(down_until, dur) - t)
+                    self.static_lost_core_s += counts[mid] \
+                        * (min(down_until, dur) - t)
                     self.windows.append((t, min(down_until, dur)))
                     t = down_until + float(rng.exponential(model.mttf_s))
         else:   # transient-stall
             p = -np.expm1(-model.rate_per_s * self.period)
-            slow_loss = (1.0 - model.slowdown) / N
             for mid, rng in enumerate(rngs):
+                slow_loss = (1.0 - model.slowdown) / counts[mid]
                 for k in range(shape.n_macro):
                     u = float(rng.random())
                     rng.integers(N)      # core id (capacity-aggregated)
@@ -566,26 +596,54 @@ class FleetEngine:
         n_macro = max(1, int(round(cfg.duration_s / cfg.idling_period_s)))
         mwin = max(dt, cfg.duration_s / 512.0)
         pwin = cfg.resolved_power_window_s
-        self.params = aging.DEFAULT_PARAMS
+        # Heterogeneous fleet (`repro.hardware`): None for the uniform
+        # default, in which case every branch below runs the legacy
+        # bit-exact path with zero ragged bookkeeping. Mixed fleets pad
+        # the core axis to the widest SKU and mask the extra lanes.
+        self.inventory = resolve_fleet(cfg.fleet, cfg.fleet_options,
+                                       cfg.n_machines)
+        inv = self.inventory
+        if inv is None:
+            self.params = aging.DEFAULT_PARAMS
+            num_cores, core_counts = cfg.num_cores, None
+        else:
+            # one shared NBTI operating point (raises for mixed Vdd/Vth
+            # fleets — those need the per-machine event engine)
+            self.params = inv.shared_dynamics_params()
+            num_cores, core_counts = inv.max_cores, tuple(inv.num_cores)
         self.shape = _Shape(
             n_prompt=cfg.n_prompt, n_token=cfg.n_token,
-            num_cores=cfg.num_cores, dt_s=dt, steps_per_period=spp,
+            num_cores=num_cores, dt_s=dt, steps_per_period=spp,
             n_macro=n_macro,
             mwin_s=mwin, n_mwin=int(np.ceil(cfg.duration_s / mwin)) + 1,
             pwin_s=pwin, n_pwin=int(np.ceil(cfg.duration_s / pwin)) + 1,
             duration_s=cfg.duration_s,
             mean_out_tokens=0.0,        # set from the trace in run()
             gating=cfg.policy == "proposed",
+            core_counts=core_counts,
         )
         # Same per-machine initial-frequency draw as the event engine's
         # CoreManager (seeded rng per machine), so both engines simulate
-        # literally the same silicon.
-        vp = variation.VariationParams(f_nominal=self.params.f_nominal)
-        self.f0 = np.stack([
-            variation.sample_initial_frequencies(
-                vp, cfg.num_cores,
-                np.random.default_rng(cfg.seed * 1000 + i))
-            for i in range(self.shape.n_machines)])
+        # literally the same silicon — on mixed fleets each machine
+        # draws its own SKU's variation parameters and core count.
+        if inv is None:
+            vp = variation.VariationParams(f_nominal=self.params.f_nominal)
+            self.f0 = np.stack([
+                variation.sample_initial_frequencies(
+                    vp, cfg.num_cores,
+                    np.random.default_rng(cfg.seed * 1000 + i))
+                for i in range(self.shape.n_machines)])
+            self._pad = None
+            self._n_vec = None
+        else:
+            self.f0 = np.ones((self.shape.n_machines, num_cores))
+            for i, n in enumerate(core_counts):
+                self.f0[i, :n] = variation.sample_initial_frequencies(
+                    inv.variation_params[i], n,
+                    np.random.default_rng(cfg.seed * 1000 + i))
+            self._pad = (np.arange(num_cores)[None, :]
+                         >= np.asarray(core_counts)[:, None])
+            self._n_vec = np.asarray(core_counts, dtype=np.float64)
         self._carbon_gate = self._resolve_carbon_gate(cfg)
         self.state = _initial_state(self.shape)
         # Fault layer (None with the default "none" model — the state
@@ -599,9 +657,10 @@ class FleetEngine:
             self.state["retried"] = np.zeros(())
             if self._faults.guard is not None:
                 self.state["failed"] = np.zeros(
-                    (self.shape.n_machines, cfg.num_cores), dtype=bool)
+                    (self.shape.n_machines, self.shape.num_cores),
+                    dtype=bool)
                 self.state["cum_haz"] = np.zeros(
-                    (self.shape.n_machines, cfg.num_cores))
+                    (self.shape.n_machines, self.shape.num_cores))
         self.resumed_from: int | None = None
 
     @staticmethod
@@ -708,8 +767,13 @@ class FleetEngine:
         next_ckpt = self._next_ckpt(start_macro)
         g_fn = self._carbon_gate[0].g_per_kwh if self._carbon_gate else None
         fx = self._faults
+        pad = self._pad
+        # per-machine core counts: the scalar num_cores on uniform
+        # fleets (identical arithmetic to the pre-hardware engine), a
+        # (M,) vector on ragged ones
+        n_vec = sh.num_cores if pad is None else self._n_vec
         for k in range(start_macro, sh.n_macro):
-            gated_eff = st["gated"]
+            gated_eff = st["gated"] if pad is None else st["gated"] | pad
             if fx is not None:
                 if "failed" in st:
                     gated_eff = gated_eff | st["failed"]
@@ -734,7 +798,9 @@ class FleetEngine:
                 # a machine with no live cores has zero capacity (via
                 # active_n) but must keep a finite nominal speed for the
                 # 1/speed bookkeeping terms
-                sm = xp.where(active_n > 0, sm, f.mean(axis=1))
+                f_all = f.mean(axis=1) if pad is None \
+                    else (f * ~pad).sum(axis=1) / n_vec
+                sm = xp.where(active_n > 0, sm, f_all)
                 sp, spd_t = sm[:P], sm[P:]
             dyn = (sp, spd_t, sm, active_n)
             q = (st["pq_s"], st["pq_n"], st["pq_out"], st["d_batch"],
@@ -758,8 +824,7 @@ class FleetEngine:
                 busy_cs = done / sm
                 st["res_busy"][:, pw] += busy_cs
                 st["res_idle"][:, pw] += active_n * sh.dt_s - busy_cs
-                st["res_gated"][:, pw] += (sh.num_cores
-                                           - active_n) * sh.dt_s
+                st["res_gated"][:, pw] += (n_vec - active_n) * sh.dt_s
                 st["res_fbusy"][:, pw] += done
                 tasks = u + ov
                 st["task_sum"] += tasks.sum()
@@ -796,7 +861,7 @@ class FleetEngine:
                     cand & (rank < allowed[:, None]))
                 st["lost_core_s"] = (st["lost_core_s"]
                                      + st["failed"].sum() * fx.period)
-            idle_norm = (active_n - u - ov) / sh.num_cores
+            idle_norm = (active_n - u - ov) / n_vec
             bins = np.clip(((idle_norm + 1.0) * 0.5
                             * (_IDLE_BINS - 1)).astype(np.int64),
                            0, _IDLE_BINS - 1)
@@ -806,12 +871,18 @@ class FleetEngine:
                 g_now = g_fn(t_now) if g_fn else 0.0
                 carbon = self._carbon_gate[1] if self._carbon_gate else None
                 corr = _gate_correction(xp, sh, active_n, u, ov, g_now,
-                                        carbon)
+                                        carbon, n_vec=self._n_vec)
+                # padded lanes behave like permanently failed cores:
+                # never gateable, never wakeable
+                fail_eff = st.get("failed")
+                if pad is not None:
+                    fail_eff = pad if fail_eff is None \
+                        else fail_eff | pad
                 st["gated"] = _apply_gating(xp, corr, st["gated"],
                                             np.ceil(np.minimum(u,
                                                                active_n)),
                                             st["dvth"],
-                                            failed=st.get("failed"))
+                                            failed=fail_eff)
             st["macro"] = np.asarray(k + 1, dtype=np.int64)
             if self.checkpoint_dir and k + 1 >= next_ckpt \
                     and k + 1 < sh.n_macro:
@@ -836,6 +907,11 @@ class FleetEngine:
         f0 = jnp.asarray(self.f0, jnp.float32)
         spp = sh.steps_per_period
         carbon = self._carbon_gate[1] if self._carbon_gate else None
+        # ragged-fleet constants (static Python branches below — the
+        # uniform trace is byte-identical to the pre-hardware engine)
+        pad = None if self._pad is None else jnp.asarray(self._pad)
+        n_vec = (sh.num_cores if pad is None
+                 else jnp.asarray(self._n_vec, jnp.float32))
         # Fault columns (constants of the run; the guardband threshold
         # crossing is the only dynamic part and lives in the carry).
         fx = self._faults
@@ -875,7 +951,7 @@ class FleetEngine:
                 obs["sp_mean"], obs["st_mean"], obs["comps"]]))
             acc["res"] = acc["res"].at[:, :, pw].add(jnp.stack([
                 busy_cs, active_n * sh.dt_s - busy_cs,
-                (sh.num_cores - active_n) * sh.dt_s, done], axis=0))
+                (n_vec - active_n) * sh.dt_s, done], axis=0))
             acc["task_sum"] = acc["task_sum"] + tasks.sum()
             acc["task_cnt"] = acc["task_cnt"] + tasks.size
             acc["task_max"] = jnp.maximum(acc["task_max"], tasks.max())
@@ -892,6 +968,8 @@ class FleetEngine:
                 arr_rows, ts, g_now = xs
             gated_eff = (st["gated"] | st["failed"]) if guard_on \
                 else st["gated"]
+            if pad is not None:
+                gated_eff = gated_eff | pad
             f = f0 * (1.0 - st["dvth"] / params.headroom)
             active = ~gated_eff
             active_n = jnp.sum(active, axis=1).astype(jnp.float32)
@@ -900,7 +978,9 @@ class FleetEngine:
             if fx is not None:
                 sm = sm * mult_row
                 active_n = active_n * up_row
-                sm = jnp.where(active_n > 0, sm, jnp.mean(f, axis=1))
+                f_all = jnp.mean(f, axis=1) if pad is None \
+                    else jnp.sum(f * ~pad, axis=1) / n_vec
+                sm = jnp.where(active_n > 0, sm, f_all)
             dyn = (sm[:sh.n_prompt], sm[sh.n_prompt:], sm, active_n)
             q = (st["pq_s"], st["pq_n"], st["pq_out"], st["d_batch"],
                  st["d_tokens"], st["d_pend"], st["d_pend_tok"],
@@ -929,7 +1009,7 @@ class FleetEngine:
                 key = jnp.where(cand, cum - thresh_j, -jnp.inf)
                 rank = jnp.argsort(jnp.argsort(-key, axis=1), axis=1)
                 failed = failed | (cand & (rank < allowed[:, None]))
-            idle_norm = (active_n - u - ov) / sh.num_cores
+            idle_norm = (active_n - u - ov) / n_vec
             bins = jnp.clip(((idle_norm + 1.0) * 0.5
                              * (_IDLE_BINS - 1)).astype(jnp.int32),
                             0, _IDLE_BINS - 1)
@@ -937,11 +1017,17 @@ class FleetEngine:
             gated = st["gated"]
             if sh.gating:
                 corr = _gate_correction(jnp, sh, active_n, u, ov, g_now,
-                                        carbon)
+                                        carbon,
+                                        n_vec=None if pad is None
+                                        else n_vec)
+                fail_eff = failed
+                if pad is not None:
+                    fail_eff = pad if fail_eff is None \
+                        else fail_eff | pad
                 gated = _apply_gating(
                     jnp, corr, gated,
                     jnp.ceil(jnp.minimum(u, active_n)), dvth,
-                    failed=failed)
+                    failed=fail_eff)
             st = dict(st)
             st.update(acc)
             (st["pq_s"], st["pq_n"], st["pq_out"], st["d_batch"],
@@ -1107,7 +1193,8 @@ class FleetEngine:
         out = []
         for m in range(sh.n_machines):
             out.append(StateResidency(
-                num_cores=sh.num_cores,
+                num_cores=(sh.num_cores if sh.core_counts is None
+                           else sh.core_counts[m]),
                 duration_s=sh.duration_s,
                 busy_core_s=float(st["res_busy"][m].sum()),
                 idle_core_s=float(st["res_idle"][m].sum()),
@@ -1124,8 +1211,17 @@ class FleetEngine:
                 telemetry=None) -> ExperimentResult:
         sh, st = self.shape, self.state
         f = self.f0 * (1.0 - st["dvth"] / self.params.headroom)
-        cvs = f.std(axis=1) / f.mean(axis=1)
-        degs = (self.f0 - f).mean(axis=1)
+        if self._pad is None:
+            cvs = f.std(axis=1) / f.mean(axis=1)
+            degs = (self.f0 - f).mean(axis=1)
+        else:
+            # masked per-machine stats: padded lanes carry no silicon
+            w = ~self._pad
+            n = self._n_vec
+            fm = (f * w).sum(axis=1) / n
+            var = (((f - fm[:, None]) ** 2) * w).sum(axis=1) / n
+            cvs = np.sqrt(var) / fm
+            degs = ((self.f0 - f) * w).sum(axis=1) / n
         idle_pcts, below = self._idle_percentiles()
         mean_lat, p99_lat, completed = self._latency_postpass()
         task_cnt = max(float(st["task_cnt"]), 1.0)
@@ -1135,8 +1231,7 @@ class FleetEngine:
                 st, completed, len(self._requests))
             lost = robustness.pop("_lost_core_s")
             robustness["availability"] = 1.0 - min(
-                lost / (sh.n_machines * sh.num_cores * sh.duration_s),
-                1.0)
+                lost / (sh.total_cores * sh.duration_s), 1.0)
         result = metrics_mod.price_and_build(
             self.cfg,
             cvs=cvs, degs=degs,
@@ -1153,6 +1248,7 @@ class FleetEngine:
             robustness=robustness,
             carbon_model=carbon_model, power_model=power_model,
             telemetry=telemetry,
+            fleet_inventory=self.inventory,
         )
         if telemetry is not None:
             self._emit_telemetry(telemetry)

@@ -114,6 +114,35 @@ class FleetAgingSettler:
         return np.asarray(out, dtype=np.float64).reshape(shape)
 
 
+class GroupedAgingSettler:
+    """Heterogeneous-fleet settler: groups managers by `(AgingParams,
+    num_cores)` and runs one `FleetAgingSettler` per homogeneous group.
+
+    Mixed fleets (`repro.hardware`) build machines with per-SKU core
+    counts and aging parameters, so one stacked batch no longer fits;
+    each group still advances through a single batched call, and every
+    group is bit-identical to its machines settling individually.
+    """
+
+    def __init__(self, managers, backend: str = "numpy"):
+        managers = list(managers)
+        if not managers:
+            raise ValueError("GroupedAgingSettler needs at least one "
+                             "manager")
+        groups: dict[tuple, list] = {}
+        for m in managers:
+            groups.setdefault((m.params, m.num_cores), []).append(m)
+        self.settlers = [FleetAgingSettler(g, backend=backend)
+                         for g in groups.values()]
+        self.managers = managers
+        # all groups resolve "auto" identically; surface the first
+        self.backend = self.settlers[0].backend
+
+    def settle(self, now: float) -> None:
+        for s in self.settlers:
+            s.settle(now)
+
+
 def settle_fleet(managers, now: float, backend: str = "numpy") -> None:
     """One-shot convenience wrapper around `FleetAgingSettler`."""
     FleetAgingSettler(managers, backend=backend).settle(now)

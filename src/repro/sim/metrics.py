@@ -107,6 +107,7 @@ def collect(cluster: Cluster, cfg: ExperimentConfig,
         engine="event",
         carbon_model=carbon_model,
         power_model=power_model,
+        fleet_inventory=cluster.inventory,
         telemetry=telemetry,
     )
 
@@ -131,6 +132,7 @@ def price_and_build(cfg: ExperimentConfig, *,
                     robustness: dict | None = None,
                     carbon_model: CarbonModel | None = None,
                     power_model: PowerModel | None = None,
+                    fleet_inventory=None,
                     telemetry=None) -> ExperimentResult:
     """Price per-machine aging + residencies into carbon/power columns
     and assemble the `ExperimentResult`. Shared by both engines: the
@@ -138,9 +140,16 @@ def price_and_build(cfg: ExperimentConfig, *,
     path (`repro.sim.fleetsim`, from stacked arrays) feed the same
     observables through the exact same pricing expressions, so a parity
     diff between engines compares simulation physics, not accounting.
+
+    `fleet_inventory` (a `repro.hardware.FleetInventory`, None on the
+    uniform default) switches pricing from fleet-wide constants to each
+    machine's own SKU: per-SKU embodied figures and baseline lifespans
+    on the carbon side, TDP-scaled power/energy, per-SKU aging
+    references, and `t0_s`-phase-shifted intensity signals.
     """
     cvs = np.asarray(cvs)
     degs = np.asarray(degs)
+    inv = fleet_inventory
 
     # Fleet-level aging imbalance + per-machine embodied carbon vs the
     # worst-case linear-aging reference at the same horizon, priced by
@@ -149,8 +158,19 @@ def price_and_build(cfg: ExperimentConfig, *,
     deg_ref = reference_degradation(aging_params, elapsed)
     model = carbon_model if carbon_model is not None else \
         get_carbon_model(cfg.carbon_model, **cfg.carbon_options)
-    per_machine_carbon = tuple(model.lifetime(deg_ref, max(float(d), 0.0))
-                               for d in degs)
+    if inv is None:
+        per_machine_carbon = tuple(
+            model.lifetime(deg_ref, max(float(d), 0.0)) for d in degs)
+    else:
+        # Each machine prices against its own SKU: its embodied figure
+        # and baseline lifespan, and the aging reference of its own
+        # process corner (f_nominal enters the linear reference).
+        models = inv.carbon_models(cfg.carbon_model, cfg.carbon_options)
+        deg_refs = tuple(reference_degradation(p, elapsed)
+                         for p in inv.aging_params)
+        per_machine_carbon = tuple(
+            models[i].lifetime(deg_refs[i], max(float(d), 0.0))
+            for i, d in enumerate(degs))
     fleet_yearly = float(sum(e.yearly_kgco2eq for e in per_machine_carbon))
 
     # Operational side: price each machine's measured C-state residency
@@ -161,13 +181,23 @@ def price_and_build(cfg: ExperimentConfig, *,
     power = power_model if power_model is not None else \
         get_power_model(cfg.power_model, **cfg.power_options)
     residencies = tuple(residencies)
-    energies = tuple(power.energy_kwh(r) for r in residencies)
-    fleet_energy = float(sum(energies))
     intensity = getattr(model, "intensity", None)
     if intensity is None:
         intensity = ConstantIntensity()
-    op_kg = float(sum(power.operational_g(r, intensity)
-                      for r in residencies)) / 1000.0
+    if inv is None:
+        energies = tuple(power.energy_kwh(r) for r in residencies)
+        op_kg = float(sum(power.operational_g(r, intensity)
+                          for r in residencies)) / 1000.0
+    else:
+        # TDP-scaled per SKU; operational carbon integrates against the
+        # machine's own (possibly phase-shifted) intensity signal.
+        energies = tuple(inv.power_scales[i] * power.energy_kwh(r)
+                         for i, r in enumerate(residencies))
+        op_kg = float(sum(
+            inv.power_scales[i]
+            * power.operational_g(r, inv.intensity_for(i, intensity))
+            for i, r in enumerate(residencies))) / 1000.0
+    fleet_energy = float(sum(energies))
     if elapsed > 0:
         yearly_op = op_kg * (_SECONDS_PER_YEAR / elapsed)
         mean_power_w = (fleet_energy * 3.6e6
@@ -215,6 +245,9 @@ def price_and_build(cfg: ExperimentConfig, *,
         engine=engine,
         fault_model=cfg.fault_model,
         fault_opts=cfg.fault_opts,
+        fleet=cfg.fleet,
+        fleet_opts=cfg.fleet_opts,
+        per_machine_sku=(None if inv is None else inv.sku_names),
         **(robustness or {}),
         provenance=Provenance(config_hash=cfg.fingerprint(),
                               seed=cfg.seed),

@@ -179,6 +179,14 @@ class ExperimentResult:
     # gate) stay byte-identical to pre-fault results.
     fault_model: str = "none"
     fault_opts: tuple[tuple[str, Any], ...] = ()
+    # hardware axis (see `repro.hardware`): which fleet composition ran
+    # and each machine's SKU name. With the default "uniform" fleet the
+    # fields keep their defaults and `scalars()` omits the block, so
+    # uniform scalar rows (and the pinned drift-gate golden) stay
+    # byte-identical to pre-hardware results.
+    fleet: str = "uniform"
+    fleet_opts: tuple[tuple[str, Any], ...] = ()
+    per_machine_sku: tuple[str, ...] | None = None
     availability: float = 1.0      # 1 - lost core-seconds / capacity
     core_failures: int = 0
     machine_crashes: int = 0
@@ -214,6 +222,11 @@ class ExperimentResult:
                                 for k, v in d.get("power_opts", ()))
         d["fault_opts"] = tuple((str(k), _tuplify(v))
                                 for k, v in d.get("fault_opts", ()))
+        d["fleet_opts"] = tuple((str(k), _tuplify(v))
+                                for k, v in d.get("fleet_opts", ()))
+        if d.get("per_machine_sku") is not None:
+            d["per_machine_sku"] = tuple(str(s)
+                                         for s in d["per_machine_sku"])
         if d.get("per_machine_carbon") is not None:
             d["per_machine_carbon"] = tuple(
                 LifetimeEstimate.from_dict(e)
@@ -267,6 +280,8 @@ class ExperimentResult:
                       "failed_requests", "rejected_requests",
                       "pending_requests", "submitted",
                       "p99_degraded_window_s")
+    # appended only when a non-uniform fleet ran, for the same reason
+    _FLEET_SCALARS = ("fleet",)
 
     def scalars(self) -> dict[str, Any]:
         """One flat row: identity + scalar metrics + flattened
@@ -278,6 +293,9 @@ class ExperimentResult:
                 row[f"{short}_p{p}"] = v
         if self.fault_model != "none":
             for f in self._ROBUST_SCALARS:
+                row[f] = getattr(self, f)
+        if self.fleet != "uniform":
+            for f in self._FLEET_SCALARS:
                 row[f] = getattr(self, f)
         if self.provenance is not None:
             row["config_hash"] = self.provenance.config_hash

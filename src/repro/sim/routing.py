@@ -34,6 +34,13 @@ Built-ins:
                    intensity: full-footprint marginal scoring that
                    re-weights the embodied/operational trade hour by
                    hour.
+  generation-aware — GreenLLM-style placement over mixed fleets
+                   (`repro.hardware`): pin latency-tolerant decode on
+                   the oldest-generation / most-aged feasible machines
+                   and steer prompt bursts toward the newest SKUs,
+                   sized by the pending request's prompt/decode token
+                   counts. Degrades to load-feasible jsq tie-breaking
+                   on the uniform default fleet.
 
 Routers are per-cluster objects (they may carry cursors or RNG-driven
 state) and must route through the `FleetView` only — they never see the
@@ -112,6 +119,61 @@ class FleetView:
     def num_cores(self) -> int:
         """Host-CPU core count per machine (homogeneous fleet)."""
         return self._c.machines[0].manager.num_cores
+
+    # -- hardware (heterogeneous-fleet layer) -------------------------- #
+    # Per-machine SKU columns in fleet order (prompt machines first,
+    # then token machines — the order `Cluster` builds them). On the
+    # uniform default fleet (`cluster.inventory is None`) these return
+    # constants, so reading them never breaks bit-exactness.
+    def generations(self) -> np.ndarray:
+        """(n_machines,) int — hardware generation per machine (0 on
+        the uniform default fleet)."""
+        inv = self._c.inventory
+        if inv is None:
+            return np.zeros(len(self._c.machines), dtype=np.int64)
+        return np.asarray(inv.generations, dtype=np.int64)
+
+    def core_counts(self) -> np.ndarray:
+        """(n_machines,) int — host-CPU core count per machine."""
+        inv = self._c.inventory
+        if inv is None:
+            return np.full(len(self._c.machines),
+                           self._c.machines[0].manager.num_cores,
+                           dtype=np.int64)
+        return np.asarray(inv.num_cores, dtype=np.int64)
+
+    def sku_names(self) -> tuple:
+        """Per-machine SKU registry names, fleet order (`None` per
+        machine on the uniform default fleet)."""
+        inv = self._c.inventory
+        if inv is None:
+            return (None,) * len(self._c.machines)
+        return inv.sku_names
+
+    def prompt_generations(self) -> np.ndarray:
+        """(n_prompt,) int — generation of each prompt instance's host."""
+        return self.generations()[: self.n_prompt]
+
+    def token_generations(self) -> np.ndarray:
+        """(n_token,) int — generation of each token instance's host."""
+        g = self.generations()
+        return g[self.n_prompt: self.n_prompt + self.n_token]
+
+    # -- pending request (size-aware routing hook) --------------------- #
+    # The cluster stamps the request being placed just before each
+    # routing call, so routers can weigh request *size* (e.g. steer
+    # prompt bursts to fast new SKUs). 0.0 outside a routing call.
+    @property
+    def pending_prompt_tokens(self) -> float:
+        """Prompt length [tokens] of the request being routed."""
+        req = self._c.pending_request
+        return 0.0 if req is None else float(req.input_tokens)
+
+    @property
+    def pending_decode_tokens(self) -> float:
+        """Decode length [tokens] of the request being routed."""
+        req = self._c.pending_request
+        return 0.0 if req is None else float(req.output_tokens)
 
     # -- load ---------------------------------------------------------- #
     def prompt_depths(self) -> np.ndarray:
@@ -495,3 +557,84 @@ class FootprintGreedyRouter(CarbonGreedyRouter):
             if score < best_score:
                 best, best_score = int(i), score
         return best
+
+
+@register_router("generation-aware")
+class GenerationAwareRouter(ClusterRouter):
+    """Generation-aware placement over mixed hardware fleets
+    (GreenLLM-style hardware/workload matching, `repro.hardware`).
+
+    Decode is latency-tolerant — per-token service dominates and a few
+    percent of frequency loss is absorbed by batching — so
+    `select_token` pins it on the *oldest-generation* load-feasible
+    machine (ties broken toward the most-aged CPU via per-machine
+    settled snapshots): old silicon soaks up the steady decode stream
+    and its embodied carbon keeps amortizing, while new SKUs stay fresh
+    and fast. Prefill is the latency-critical burst, so
+    `select_prompt` steers it to the *newest-generation* feasible
+    machine (ties broken jsq-style toward the least-loaded, then the
+    lowest index).
+
+    Size-awareness (the `FleetView.pending_*_tokens` hook): a request
+    whose prompt is at least `long_prompt_tokens` — or whose decode is
+    at least `long_decode_tokens` — widens the respective feasibility
+    slack by `burst_extra_slack`, letting big compute-heavy prompts
+    reach a new SKU (and long throughput-bound decodes reach an old
+    one) even when it is not currently the least loaded.
+
+    Reads per-machine aging through snapshots only (never
+    `fleet.aging_params`), so mixed-SKU fleets with per-machine NBTI
+    operating points route correctly. On the uniform default fleet all
+    generations are 0 and the router degrades to load-feasible jsq
+    tie-breaking.
+    """
+
+    def __init__(self, prompt_slack: int = 0, token_slack: int = 2,
+                 long_prompt_tokens: float = 256.0,
+                 long_decode_tokens: float = 64.0,
+                 burst_extra_slack: int = 2):
+        for label, v in (("prompt_slack", prompt_slack),
+                         ("token_slack", token_slack),
+                         ("burst_extra_slack", burst_extra_slack)):
+            if v < 0:
+                raise ValueError(f"{label} must be >= 0, got {v}")
+        if long_prompt_tokens <= 0.0:
+            raise ValueError(f"long_prompt_tokens must be > 0, got "
+                             f"{long_prompt_tokens}")
+        if long_decode_tokens <= 0.0:
+            raise ValueError(f"long_decode_tokens must be > 0, got "
+                             f"{long_decode_tokens}")
+        self.prompt_slack = prompt_slack
+        self.token_slack = token_slack
+        self.long_prompt_tokens = long_prompt_tokens
+        self.long_decode_tokens = long_decode_tokens
+        self.burst_extra_slack = burst_extra_slack
+
+    def select_prompt(self, fleet: FleetView) -> int:
+        loads = fleet.prompt_depths()
+        slack = self.prompt_slack
+        if fleet.pending_prompt_tokens >= self.long_prompt_tokens:
+            slack += self.burst_extra_slack
+        cand = _feasible(loads, slack)
+        if len(cand) == 1:
+            return int(cand[0])
+        gens = fleet.prompt_generations()[cand]
+        new = cand[gens == gens.max()]
+        if len(new) == 1:
+            return int(new[0])
+        return int(new[int(np.argmin(loads[new]))])
+
+    def select_token(self, fleet: FleetView) -> int:
+        loads = fleet.token_loads()
+        slack = self.token_slack
+        if fleet.pending_decode_tokens >= self.long_decode_tokens:
+            slack += self.burst_extra_slack
+        cand = _feasible(loads, slack)
+        if len(cand) == 1:
+            return int(cand[0])
+        gens = fleet.token_generations()[cand]
+        old = cand[gens == gens.min()]
+        if len(old) == 1:
+            return int(old[0])
+        deg = [s.mean_degradation for s in fleet.token_aging(old)]
+        return int(old[int(np.argmax(deg))])

@@ -33,6 +33,7 @@ from __future__ import annotations
 from repro.carbon import get_carbon_model
 from repro.core.policies import canonical_policy_name
 from repro.faults.registry import canonical_fault_model_name, get_fault_model
+from repro.hardware.inventory import canonical_fleet_name, resolve_fleet
 from repro.power import get_power_model
 from repro.power.registry import canonical_power_model_name
 from repro.sim import metrics as metrics_mod
@@ -69,6 +70,10 @@ def run_experiment(cfg: ExperimentConfig,
     # Fault axis fail-fast: instantiate once to validate name + opts
     # (the cluster builds its own per-machine instances).
     get_fault_model(cfg.fault_model, **cfg.fault_options)
+    # Fleet axis fail-fast: resolve the hardware inventory (None for
+    # the bit-exact uniform default) so bad SKU names / row counts fail
+    # here; the cluster / fleet engine re-resolve their own copy.
+    resolve_fleet(cfg.fleet, cfg.fleet_options, cfg.n_machines)
     if cfg.engine == "fleet":
         # Vectorized time-stepped engine (repro.sim.fleetsim) — the
         # scale path. The event loop below stays the bit-exact
@@ -148,23 +153,27 @@ def run_policy_sweep(
     routers=None,
     power_models=None,
     fault_models=None,
+    fleets=None,
     parallel: int | None = None,
 ) -> SweepResult:
     """Run the same experiment across policies (x scenarios x routers
-    x power models x fault models).
+    x power models x fault models x fleets).
 
-    Policies/scenarios/routers/power models/fault models are given by
-    registry name. With `scenarios=None`, `routers=None`,
-    `power_models=None` and `fault_models=None` (default) the result is
-    keyed by policy name, preserving the single-axis API. Adding
-    `scenarios=` keys by `(policy, scenario)`; adding `routers=` keys
-    by `(policy, router)`; adding `power_models=` appends a power-model
-    part; adding `fault_models=` appends a fault-model part; all
-    together key by `(policy, scenario, router, power_model,
-    fault_model)`. `cfg.policy_opts` / `cfg.scenario_opts` /
-    `cfg.router_opts` / `cfg.power_opts` / `cfg.fault_opts` only apply
-    to the sweep entries matching `cfg.policy` / `cfg.scenario` /
-    `cfg.router` / `cfg.power_model` / `cfg.fault_model`.
+    Policies/scenarios/routers/power models/fault models/fleets are
+    given by registry name (fleets by fleet spec — see
+    `repro.hardware`). With `scenarios=None`, `routers=None`,
+    `power_models=None`, `fault_models=None` and `fleets=None`
+    (default) the result is keyed by policy name, preserving the
+    single-axis API. Adding `scenarios=` keys by `(policy, scenario)`;
+    adding `routers=` keys by `(policy, router)`; adding
+    `power_models=` appends a power-model part; adding `fault_models=`
+    appends a fault-model part; adding `fleets=` appends a fleet part;
+    all together key by `(policy, scenario, router, power_model,
+    fault_model, fleet)`. `cfg.policy_opts` / `cfg.scenario_opts` /
+    `cfg.router_opts` / `cfg.power_opts` / `cfg.fault_opts` /
+    `cfg.fleet_opts` only apply to the sweep entries matching
+    `cfg.policy` / `cfg.scenario` / `cfg.router` / `cfg.power_model` /
+    `cfg.fault_model` / `cfg.fleet`.
 
     `parallel=N` fans the grid's cells across a process pool of N
     workers. Every cell is an independent simulation whose seeding is
@@ -185,11 +194,13 @@ def run_policy_sweep(
     router_axis = routers is not None
     power_axis = power_models is not None
     fault_axis = fault_models is not None
+    fleet_axis = fleets is not None
     axes = (("policy",)
             + (("scenario",) if scenario_axis else ())
             + (("router",) if router_axis else ())
             + (("power_model",) if power_axis else ())
-            + (("fault_model",) if fault_axis else ()))
+            + (("fault_model",) if fault_axis else ())
+            + (("fleet",) if fleet_axis else ()))
     cells: list[tuple[object, ExperimentConfig]] = []
     for s in (scenarios if scenario_axis else (cfg.scenario,)):
         s_name = canonical_scenario_name(s)
@@ -207,15 +218,20 @@ def run_policy_sweep(
                     f_name = canonical_fault_model_name(fm)
                     f_cfg = w_cfg if f_name == w_cfg.fault_model \
                         else w_cfg.with_fault_model(f_name)
-                    for p in policies:
-                        run_cfg = _with_policy(f_cfg, p)
-                        key = ((run_cfg.policy,)
-                               + ((s_name,) if scenario_axis else ())
-                               + ((r_name,) if router_axis else ())
-                               + ((w_name,) if power_axis else ())
-                               + ((f_name,) if fault_axis else ()))
-                        cells.append((key if len(key) > 1 else key[0],
-                                      run_cfg))
+                    for fl in (fleets if fleet_axis else (cfg.fleet,)):
+                        fl_name = canonical_fleet_name(fl)
+                        fl_cfg = f_cfg if fl_name == f_cfg.fleet \
+                            else f_cfg.with_fleet(fl_name)
+                        for p in policies:
+                            run_cfg = _with_policy(fl_cfg, p)
+                            key = ((run_cfg.policy,)
+                                   + ((s_name,) if scenario_axis else ())
+                                   + ((r_name,) if router_axis else ())
+                                   + ((w_name,) if power_axis else ())
+                                   + ((f_name,) if fault_axis else ())
+                                   + ((fl_name,) if fleet_axis else ()))
+                            cells.append((key if len(key) > 1 else key[0],
+                                          run_cfg))
     if parallel is not None and int(parallel) > 1 and len(cells) > 1:
         import concurrent.futures
 

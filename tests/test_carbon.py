@@ -337,6 +337,8 @@ def _axis_params():
     from repro.core.policies import registry as policy_reg
     from repro.faults import registry as fault_reg
     from repro.faults.base import FaultModel
+    from repro.hardware import registry as hardware_reg
+    from repro.hardware.base import HardwareSKU
     from repro.power import registry as power_reg
     from repro.power.base import PowerModel
     from repro.sim import routing as router_reg
@@ -358,12 +360,14 @@ def _axis_params():
                      subclass_of(PowerModel), id="power"),
         pytest.param(fault_reg._MODELS, "fault model",
                      subclass_of(FaultModel), id="fault"),
+        pytest.param(hardware_reg._SKUS, "hardware SKU",
+                     subclass_of(HardwareSKU), id="hardware"),
     ]
 
 
 class TestRegistryParity:
-    """The six axes share `repro.registry.Registry`; their pinned error
-    wordings must keep the same shape, byte for byte."""
+    """The seven axes share `repro.registry.Registry`; their pinned
+    error wordings must keep the same shape, byte for byte."""
 
     @pytest.mark.parametrize("reg,kind,imposter", _axis_params())
     def test_unknown_name_wording(self, reg, kind, imposter):
